@@ -1,0 +1,97 @@
+"""Aggregate dry-run JSON records into the EXPERIMENTS.md tables.
+
+  PYTHONPATH=src python -m repro.analysis.aggregate [results/dryrun]
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import Dict, List
+
+ORDER_SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(results_dir: str) -> List[dict]:
+    recs = []
+    for name in sorted(os.listdir(results_dir)):
+        if name.endswith(".json"):
+            with open(os.path.join(results_dir, name)) as f:
+                recs.append(json.load(f))
+    return recs
+
+
+def fmt_s(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x*1e6:.3g}us"
+    if x < 1:
+        return f"{x*1e3:.3g}ms"
+    return f"{x:.3g}s"
+
+
+def roofline_table(recs: List[dict], mesh: str = "single") -> str:
+    rows = [r for r in recs if r["mesh"] == mesh]
+    rows.sort(key=lambda r: (r["arch"], ORDER_SHAPES.index(r["shape"])))
+    out = [
+        "| arch | shape | t_comp | t_mem | t_coll | bound | useful | "
+        "frac | GiB/dev (arg+tmp) |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r["status"] == "skipped":
+            out.append(
+                f"| {r['arch']} | {r['shape']} | -- | -- | -- | "
+                f"*skipped* | -- | -- | {r['reason'].split(';')[0]} |"
+            )
+            continue
+        if r["status"] != "ok":
+            out.append(
+                f"| {r['arch']} | {r['shape']} | ERROR | | | | | | "
+                f"{r.get('error','')[:60]} |"
+            )
+            continue
+        rf = r["roofline"]
+        ma = r["memory_analysis"]
+        out.append(
+            "| {arch} | {shape} | {tc} | {tm} | {tx} | {b} | {u:.2f} | "
+            "{f:.2f} | {a:.1f}+{t:.1f} |".format(
+                arch=r["arch"], shape=r["shape"],
+                tc=fmt_s(rf["t_compute"]), tm=fmt_s(rf["t_memory"]),
+                tx=fmt_s(rf["t_collective"]), b=rf["bottleneck"],
+                u=rf["useful_flops_ratio"], f=rf["roofline_fraction"],
+                a=ma["argument_size_in_bytes"] / 2 ** 30,
+                t=ma["temp_size_in_bytes"] / 2 ** 30,
+            )
+        )
+    return "\n".join(out)
+
+
+def dryrun_summary(recs: List[dict]) -> str:
+    ok = sum(r["status"] == "ok" for r in recs)
+    sk = sum(r["status"] == "skipped" for r in recs)
+    er = sum(r["status"] == "error" for r in recs)
+    lines = [f"cells: {ok} compiled ok, {sk} ruled skips, {er} errors"]
+    for mesh in ("single", "multipod"):
+        rows = [r for r in recs if r["mesh"] == mesh and r["status"] == "ok"]
+        if rows:
+            ct = sum(r.get("compile_s", 0) for r in rows)
+            lines.append(
+                f"  {mesh}: {len(rows)} cells, total compile {ct:.0f}s"
+            )
+    return "\n".join(lines)
+
+
+def main() -> None:
+    d = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+    recs = load(d)
+    print(dryrun_summary(recs))
+    print("\n## single-pod (16x16 = 256 chips)\n")
+    print(roofline_table(recs, "single"))
+    print("\n## multi-pod (2x16x16 = 512 chips)\n")
+    print(roofline_table(recs, "multipod"))
+
+
+if __name__ == "__main__":
+    main()

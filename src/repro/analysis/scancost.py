@@ -1,0 +1,370 @@
+"""Scan-aware cost composition.
+
+XLA's ``cost_analysis`` counts a while-loop body ONCE regardless of trip
+count (verified empirically -- see EXPERIMENTS.md section Roofline), so a
+scan-over-layers program under-reports FLOPs/bytes by ~n_layers.  We
+correct by compiling each scanned body *standalone on the same mesh with
+the same shardings* and composing:
+
+    total = outer_hlo + sum_scans (trips - 1) x body_hlo
+
+with one level of recursion for nested scans (jamba's period scan contains
+mamba's time scan; xlstm's layers each contain a time scan).
+
+The probes measure post-SPMD per-device costs, so the composition stays a
+"from the compiled artifact" measurement, just assembled per loop.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import shapes as shape_mod
+from ..distributed import sharding as shard_rules
+from ..models import hybrid as hybrid_mod
+from ..models import ssm, transformer
+from ..models.config import ModelConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _cost(fn, arg_specs, in_shardings, mesh) -> Tuple[float, float, float]:
+    from .roofline import collective_bytes
+    with mesh:
+        c = jax.jit(fn, in_shardings=in_shardings).lower(*arg_specs).compile()
+    ca = c.cost_analysis()
+    coll = float(sum(collective_bytes(c.as_text()).values()))
+    return (float(ca.get("flops", 0.0)),
+            float(ca.get("bytes accessed", 0.0)), coll)
+
+
+def _dp_axes(mesh):
+    if shard_rules.DP_ONLY:
+        return tuple(mesh.axis_names)
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def _named(mesh, *spec):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    return NamedSharding(mesh, P(*spec))
+
+
+def _block_param_specs(params_shape, mesh, key: str = "blocks"):
+    """Single-layer slice of the stacked block params + its shardings."""
+    stacked = params_shape[key]
+    one = jax.tree.map(lambda l: SDS(l.shape[1:], l.dtype), stacked)
+    sh = shard_rules.param_shardings(one, mesh)
+    return one, sh
+
+
+def corrections(
+    cfg: ModelConfig,
+    shape_name: str,
+    mesh,
+    model,
+    params_shape,
+    *,
+    moe_capacity: Optional[int],
+    attn_impl: str = "xla",
+) -> Dict[str, Any]:
+    """Returns {'flops': extra_flops, 'bytes': extra_bytes, 'detail': {...}}
+    to ADD to the outer compiled costs."""
+    spec = shape_mod.SHAPES[shape_name]
+    B, T = spec.global_batch, spec.seq_len
+    dp = _dp_axes(mesh)
+    # flash probes: single-trip KV scan so the body carries the full cost
+    from ..kernels.attention import xla_flash as _xf
+    _saved_chunk = _xf.DEFAULT_CHUNK
+    if attn_impl == "xla_flash":
+        _xf.DEFAULT_CHUNK = max(T, 1)
+    cd = jnp.dtype(cfg.compute_dtype)
+    detail: Dict[str, Any] = {}
+    extra_f = 0.0
+    extra_b = 0.0
+    extra_c = 0.0
+
+    batch_shardable = B % int(
+        jnp.prod(jnp.array([dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+                            for a in dp]))
+    ) == 0 if dp else False
+    x_sh = _named(mesh, dp if batch_shardable else None, None, None)
+    pos_sh = _named(mesh, dp if batch_shardable else None, None)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        L = cfg.n_layers
+        bp_shape, bp_sh = _block_param_specs(params_shape, mesh)
+        t_eff = 1 if spec.kind == "decode" else T
+        x_spec = SDS((B, t_eff, cfg.d_model), cd)
+        pos_spec = SDS((B, t_eff), jnp.int32)
+
+        if spec.kind == "train":
+            def fwd(bp, x, pos):
+                y, _ = transformer.block_apply(
+                    bp, x, cfg, positions=pos, attn_impl=attn_impl,
+                    moe_capacity=moe_capacity,
+                )
+                return y
+
+            def fwd_bwd(bp, x, pos):
+                def loss(xx):
+                    y, _ = transformer.block_apply(
+                        bp, xx, cfg, positions=pos, attn_impl=attn_impl,
+                        moe_capacity=moe_capacity,
+                    )
+                    return jnp.sum(y.astype(jnp.float32))
+                l, g = jax.value_and_grad(loss)(x)
+                return l, g
+
+            cf, bf, xf = _cost(fwd, (bp_shape, x_spec, pos_spec),
+                               (bp_sh, x_sh, pos_sh), mesh)
+            cfb, bfb, xfb = _cost(fwd_bwd, (bp_shape, x_spec, pos_spec),
+                                  (bp_sh, x_sh, pos_sh), mesh)
+            extra_f = (L - 1) * (cf + cfb)
+            extra_b = (L - 1) * (bf + bfb)
+            extra_c = (L - 1) * (xf + xfb)
+            detail = {"per_layer_fwd": cf, "per_layer_fwd_bwd": cfb,
+                      "per_layer_coll": xf + xfb, "layers": L}
+        else:
+            cache_spec = {
+                "k": SDS((B, T, cfg.n_kv_heads, cfg.hd), cd),
+                "v": SDS((B, T, cfg.n_kv_heads, cfg.hd), cd),
+            }
+            cache_sh = shard_rules.cache_shardings(
+                cache_spec, cfg, mesh, batch=B
+            )
+            idx_spec = SDS((), jnp.int32)
+
+            def fwd_cache(bp, x, pos, cache, idx):
+                y, nc = transformer.block_apply(
+                    bp, x, cfg, positions=pos, cache=cache,
+                    cache_index=idx, attn_impl="xla",
+                    moe_capacity=moe_capacity,
+                )
+                return y, nc
+
+            cf, bf, xf = _cost(
+                fwd_cache,
+                (bp_shape, x_spec, pos_spec, cache_spec, idx_spec),
+                (bp_sh, x_sh, pos_sh, cache_sh, _named(mesh)),
+                mesh,
+            )
+            extra_f = (L - 1) * cf
+            extra_b = (L - 1) * bf
+            extra_c = (L - 1) * xf
+            detail = {"per_layer": cf, "per_layer_coll": xf, "layers": L}
+
+    elif cfg.family == "hybrid_jamba":
+        P_n = cfg.n_layers // cfg.attn_period
+        pp_shape, pp_sh = _block_param_specs(params_shape, mesh, "periods")
+        t_eff = 1 if spec.kind == "decode" else T
+        x_spec = SDS((B, t_eff, cfg.d_model), cd)
+        pos_spec = SDS((B, t_eff), jnp.int32)
+
+        # mamba time-step probe (inner scan body)
+        m = cfg.mamba
+        d_in = m.expand * cfg.d_model
+        h_spec = SDS((B, d_in, m.d_state), jnp.float32)
+        step_in = (
+            SDS((B, d_in), jnp.float32), SDS((B, m.d_state), jnp.float32),
+            SDS((B, m.d_state), jnp.float32), SDS((B, d_in), jnp.float32),
+        )
+        b_only = _named(mesh, dp if batch_shardable else None, None)
+        b3 = _named(mesh, dp if batch_shardable else None, None, None)
+        A_spec = SDS((d_in, m.d_state), jnp.float32)
+
+        def mamba_step(h, A, dt_t, b_t, c_t, x_t):
+            dA_t = jnp.exp(dt_t[..., None] * A[None])
+            dBx_t = (dt_t * x_t)[..., None] * b_t[:, None, :]
+            h = dA_t * h + dBx_t
+            y_t = jnp.einsum("bds,bs->bd", h, c_t)
+            return h, y_t
+
+        cstep, bstep, xstep = _cost(
+            mamba_step,
+            (h_spec, A_spec) + step_in,
+            (b3, _named(mesh, None, None), b_only, b_only, b_only, b_only),
+            mesh,
+        )
+        n_mamba = cfg.attn_period - 1
+
+        if spec.kind == "train":
+            def fwd(pp, x, pos):
+                y, _ = hybrid_mod._period_apply(
+                    pp, x, cfg, positions=pos, attn_impl=attn_impl,
+                    moe_capacity=moe_capacity,
+                )
+                return y
+
+            def fwd_bwd(pp, x, pos):
+                def loss(xx):
+                    y, _ = hybrid_mod._period_apply(
+                        pp, xx, cfg, positions=pos, attn_impl=attn_impl,
+                        moe_capacity=moe_capacity,
+                    )
+                    return jnp.sum(y.astype(jnp.float32))
+                return jax.value_and_grad(loss)(x)
+
+            cf, bf, xf = _cost(fwd, (pp_shape, x_spec, pos_spec),
+                               (pp_sh, x_sh, pos_sh), mesh)
+            cfb, bfb, xfb = _cost(fwd_bwd, (pp_shape, x_spec, pos_spec),
+                                  (pp_sh, x_sh, pos_sh), mesh)
+            # correct each period body for its 7 inner time scans
+            # (fwd once + recompute/bwd ~ 3x step cost per extra timestep)
+            inner_f = n_mamba * (t_eff - 1) * cstep
+            inner_b = n_mamba * (t_eff - 1) * bstep
+            cf_c, cfb_c = cf + inner_f, cfb + 3 * inner_f
+            bf_c, bfb_c = bf + inner_b, bfb + 3 * inner_b
+            extra_f = (P_n - 1) * (cf_c + cfb_c) + (inner_f + 3 * inner_f)
+            extra_b = (P_n - 1) * (bf_c + bfb_c) + (inner_b + 3 * inner_b)
+            extra_c = (P_n - 1) * (xf + xfb)
+            detail = {"per_period_fwd": cf, "per_period_fwd_bwd": cfb,
+                      "mamba_step": cstep, "periods": P_n}
+        else:
+            cache_spec = {
+                "k": SDS((B, T, cfg.n_kv_heads, cfg.hd), cd),
+                "v": SDS((B, T, cfg.n_kv_heads, cfg.hd), cd),
+                "conv": SDS((n_mamba, B, m.d_conv - 1, d_in), cd),
+                "ssm": SDS((n_mamba, B, d_in, m.d_state), jnp.float32),
+            }
+            cache_sh = shard_rules.cache_shardings(
+                cache_spec, cfg, mesh, batch=B
+            )
+            idx_spec = SDS((), jnp.int32)
+
+            def fwd_cache(pp, x, pos, cache, idx):
+                return hybrid_mod._period_apply(
+                    pp, x, cfg, positions=pos, attn_impl="xla",
+                    moe_capacity=moe_capacity, cache=cache, cache_index=idx,
+                )
+
+            cf, bf, xf = _cost(
+                fwd_cache,
+                (pp_shape, x_spec, pos_spec, cache_spec, idx_spec),
+                (pp_sh, x_sh, pos_sh, cache_sh, _named(mesh)),
+                mesh,
+            )
+            inner_f = n_mamba * (t_eff - 1) * cstep
+            inner_b = n_mamba * (t_eff - 1) * bstep
+            extra_f = (P_n - 1) * (cf + inner_f) + inner_f
+            extra_b = (P_n - 1) * (bf + inner_b) + inner_b
+            extra_c = (P_n - 1) * xf
+            detail = {"per_period": cf, "mamba_step": cstep, "periods": P_n}
+
+    elif cfg.family == "ssm_xlstm":
+        # python loop over layers (outer counts each once); correct the
+        # inner time scans only.
+        t_eff = 1 if spec.kind == "decode" else T
+        if t_eff > 1 and ssm.MLSTM_CHUNK and t_eff > ssm.MLSTM_CHUNK:
+            # chunkwise-parallel mLSTM: scan over T/W chunks
+            W = ssm.MLSTM_CHUNK
+            H, hd = cfg.n_heads, cfg.hd
+            bdp = dp if batch_shardable else None
+
+            def chunk_body(q, k, v, ip, fl, C, n, m):
+                h, (C, n, m) = ssm._mlstm_chunk_body(
+                    q, k, v, ip, fl, C, n, m, W=W
+                )
+                return h, C, n, m
+
+            specs = (
+                SDS((B, H, W, hd), jnp.float32),
+                SDS((B, H, W, hd), jnp.float32),
+                SDS((B, H, W, hd), jnp.float32),
+                SDS((B, H, W), jnp.float32), SDS((B, H, W), jnp.float32),
+                SDS((B, H, hd, hd), jnp.float32),
+                SDS((B, H, hd), jnp.float32), SDS((B, H), jnp.float32),
+            )
+            shs = tuple(
+                _named(mesh, *((bdp,) + (None,) * (len(s.shape) - 1)))
+                for s in specs
+            )
+            cc, bc, _x = _cost(chunk_body, specs, shs, mesh)
+
+            def chunk_vjp(q, k, v, ip, fl, C, n, m):
+                def loss(qq):
+                    h, _ = ssm._mlstm_chunk_body(
+                        qq, k, v, ip, fl, C, n, m, W=W
+                    )
+                    return jnp.sum(h)
+                return jax.value_and_grad(loss)(q)
+
+            cvj, bvj, _x2 = _cost(chunk_vjp, specs, shs, mesh)
+            n_s = sum(
+                1 for i in range(cfg.n_layers)
+                if ssm.xlstm_block_kind(i, cfg) == "slstm"
+            )
+            n_m = cfg.n_layers - n_s
+            trips = t_eff // W
+            if spec.kind == "train":
+                per = (trips - 1) * (cc + cvj)
+                per_b = (trips - 1) * (bc + bvj)
+            else:
+                per = (trips - 1) * cc
+                per_b = (trips - 1) * bc
+            # sLSTM layers stay recurrent: reuse the step-probe path below
+            extra_f = n_m * per
+            extra_b = n_m * per_b
+            detail = {"mlstm_chunk": cc, "chunks": trips,
+                      "layers_m": n_m, "layers_s": n_s,
+                      "note": "slstm steps uncorrected (3 tiny layers)"}
+        elif t_eff > 1:
+            H, hd = cfg.n_heads, cfg.hd
+            bdp = dp if batch_shardable else None
+
+            def mlstm_step(C, n, m_, qt, kt, vt, it, ft):
+                m_new = jnp.maximum(ft + m_, it)
+                i_g = jnp.exp(it - m_new)
+                f_g = jnp.exp(ft + m_ - m_new)
+                C = f_g[..., None, None] * C + i_g[..., None, None] * (
+                    kt[..., :, None] * vt[..., None, :]
+                )
+                n = f_g[..., None] * n + i_g[..., None] * kt
+                num = jnp.einsum("bhkv,bhk->bhv", C, qt)
+                den = jnp.abs(jnp.einsum("bhk,bhk->bh", n, qt))
+                h = num / jnp.maximum(den, 1.0)[..., None]
+                return C, n, m_new, h
+
+            specs = (
+                SDS((B, H, hd, hd), jnp.float32),
+                SDS((B, H, hd), jnp.float32), SDS((B, H), jnp.float32),
+                SDS((B, H, hd), jnp.float32), SDS((B, H, hd), jnp.float32),
+                SDS((B, H, hd), jnp.float32), SDS((B, H), jnp.float32),
+                SDS((B, H), jnp.float32),
+            )
+            shs = tuple(
+                _named(mesh, *( (bdp,) + (None,) * (len(s.shape) - 1) ))
+                for s in specs
+            )
+            cm, bm, _xm = _cost(mlstm_step, specs, shs, mesh)
+
+            def slstm_step(c, n, m_, zt, it, ft):
+                m_new = jnp.maximum(ft + m_, it)
+                i_g = jnp.exp(it - m_new)
+                f_g = jnp.exp(ft + m_ - m_new)
+                c = f_g * c + i_g * zt
+                n = f_g * n + i_g
+                return c, n, m_new, c / jnp.maximum(n, 1.0)
+
+            D = H * hd
+            s2 = tuple(SDS((B, D), jnp.float32) for _ in range(6))
+            sh2 = tuple(_named(mesh, bdp, None) for _ in range(6))
+            cs, bs, _xs = _cost(slstm_step, s2, sh2, mesh)
+
+            n_s = sum(
+                1 for i in range(cfg.n_layers)
+                if ssm.xlstm_block_kind(i, cfg) == "slstm"
+            )
+            n_m = cfg.n_layers - n_s
+            mult = 4.0 if spec.kind == "train" else 1.0  # fwd + ~3x bwd
+            extra_f = mult * (t_eff - 1) * (n_m * cm + n_s * cs)
+            extra_b = mult * (t_eff - 1) * (n_m * bm + n_s * bs)
+            detail = {"mlstm_step": cm, "slstm_step": cs,
+                      "layers_m": n_m, "layers_s": n_s}
+
+    # encdec (whisper): python loops, no scans -> no correction
+    if attn_impl == "xla_flash":
+        _xf.DEFAULT_CHUNK = _saved_chunk
+    return {"flops": extra_f, "bytes": extra_b, "coll": extra_c,
+            "detail": detail}

@@ -1,0 +1,7 @@
+"""CFD application substrate: the paper's three operators (Inverse
+Helmholtz, Interpolation, Gradient), numpy oracles, and the element-
+batched simulation driver (batching / double-buffering / CU replication
+as mesh sharding)."""
+from . import operators, reference, simulation
+
+__all__ = ["operators", "reference", "simulation"]

@@ -1,0 +1,89 @@
+"""The paper's three CFD operators, built through the DSL-to-executable
+flow (core.api), with selectable backend/precision -- the per-kernel
+equivalent of the Olympus "Optimize" step.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from ..core import api, dsl
+from ..core.emit import CompiledProgram
+from ..core.precision import POLICIES
+from ..kernels.helmholtz import ops as helmholtz_ops
+
+
+def build_inverse_helmholtz(
+    p: int = 11,
+    *,
+    policy="float32",
+    backend: str = "xla",
+    optimize: bool = True,
+    max_groups: Optional[int] = None,
+    block_elements: int = 128,
+) -> CompiledProgram:
+    """Compile the Inverse Helmholtz operator (paper Fig. 2).
+
+    backend:
+      * ``xla``    -- factorized einsum chain, one jitted program.
+      * ``staged`` -- one jitted stage per scheduled group (dataflow view).
+      * ``pallas`` -- the fused TPU kernel (kernels/helmholtz); on CPU use
+        kernel tests' interpret mode instead.
+    """
+    pallas_impl = None
+    if backend == "pallas":
+        pallas_impl = helmholtz_ops.make_pallas_impl(
+            block_elements=block_elements
+        )
+    return api.compile_cfdlang(
+        dsl.INVERSE_HELMHOLTZ_SRC.format(p=p),
+        element_vars=("u", "D", "v"),
+        policy=policy,
+        optimize=optimize,
+        backend=backend,
+        max_groups=max_groups,
+        pallas_impl=pallas_impl,
+    )
+
+
+def build_interpolation(
+    n: int = 11,
+    m: int = 11,
+    *,
+    policy="float32",
+    backend: str = "xla",
+    optimize: bool = True,
+    max_groups: Optional[int] = None,
+) -> CompiledProgram:
+    return api.compile_cfdlang(
+        dsl.INTERPOLATION_SRC.format(n=n, m=m),
+        element_vars=("u", "v"),
+        policy=policy,
+        optimize=optimize,
+        backend=backend,
+        max_groups=max_groups,
+    )
+
+
+def build_gradient(
+    nx: int = 8,
+    ny: int = 7,
+    nz: int = 6,
+    *,
+    policy="float32",
+    backend: str = "xla",
+    optimize: bool = True,
+    max_groups: Optional[int] = None,
+) -> CompiledProgram:
+    return api.compile_cfdlang(
+        dsl.GRADIENT_SRC.format(nx=nx, ny=ny, nz=nz),
+        element_vars=("u", "gx", "gy", "gz"),
+        policy=policy,
+        optimize=optimize,
+        backend=backend,
+        max_groups=max_groups,
+    )
+
+
+def flops_per_element(p: int) -> int:
+    """Paper Eq. (2)."""
+    return (12 * p + 1) * p ** 3

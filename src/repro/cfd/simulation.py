@@ -1,0 +1,145 @@
+"""Element-batched simulation driver -- the Olympus system/host layer.
+
+Implements the paper's section 3.1 quantities on the TPU mesh:
+
+  * **batch**: ``E`` elements processed per dispatch.  The paper sizes E
+    so a batch fills one 256 MB HBM pseudo-channel; here we size it so a
+    batch fills a target fraction of per-device HBM.
+  * **N_b = N_eq / E** batches, **I = N_b / N_cu** iterations, where the
+    CU count is the number of mesh devices the element axis is sharded
+    over (CU replication == data parallelism over elements).
+  * **double buffering**: batch k+1 is transferred host->device while
+    batch k computes (JAX async dispatch + explicit device_put staging --
+    the ping/pong channel pair of Fig. 14a).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .operators import build_inverse_helmholtz, flops_per_element
+
+
+@dataclasses.dataclass
+class SimConfig:
+    p: int = 11
+    n_eq: int = 2_000_000          # paper: 2M elements simulated
+    batch_elements: int = 4096     # E
+    policy: str = "float32"
+    backend: str = "xla"
+    double_buffer: bool = True
+    seed: int = 0
+
+    @property
+    def n_batches(self) -> int:
+        return self.n_eq // self.batch_elements
+
+    def bytes_per_element(self, bytes_per_scalar: int = 4) -> int:
+        # u, D in; v out  (S shared, amortized)
+        return 3 * self.p ** 3 * bytes_per_scalar
+
+    @classmethod
+    def batch_for_channel(cls, p: int, channel_bytes: int = 256 * 2 ** 20,
+                          bytes_per_scalar: int = 4) -> int:
+        """The paper's E: elements whose I/O fits one HBM channel."""
+        return channel_bytes // (3 * p ** 3 * bytes_per_scalar)
+
+
+def element_mesh(devices=None) -> Mesh:
+    """1-D mesh over all local devices: the CU-replication axis."""
+    devices = devices if devices is not None else jax.devices()
+    return Mesh(np.array(devices), ("elements",))
+
+
+def _batch_generator(cfg: SimConfig) -> Iterator[Dict[str, np.ndarray]]:
+    """Deterministic, resumable synthetic element stream ([-1,1] data,
+    matching the paper's range normalization)."""
+    p = cfg.p
+    for b in range(cfg.n_batches):
+        rng = np.random.default_rng(cfg.seed + b)
+        yield {
+            "D": rng.uniform(-1, 1, (cfg.batch_elements, p, p, p)).astype(np.float32),
+            "u": rng.uniform(-1, 1, (cfg.batch_elements, p, p, p)).astype(np.float32),
+        }
+
+
+@dataclasses.dataclass
+class SimResult:
+    batches: int
+    elements: int
+    wall_s: float
+    checksum: float
+
+    @property
+    def gflops(self) -> float:
+        return 0.0 if self.wall_s == 0 else (
+            self.elements * 1e-9 / self.wall_s
+        )
+
+
+def run_simulation(
+    cfg: SimConfig,
+    *,
+    mesh: Optional[Mesh] = None,
+    max_batches: Optional[int] = None,
+    S: Optional[np.ndarray] = None,
+) -> SimResult:
+    """Run the batched Inverse-Helmholtz simulation.
+
+    Returns wall time and a checksum; GFLOPS is derived with the paper's
+    op-count model by the caller (benchmarks/).
+    """
+    mesh = mesh or element_mesh()
+    compiled = build_inverse_helmholtz(
+        cfg.p, policy=cfg.policy, backend=cfg.backend
+    )
+    rng = np.random.default_rng(cfg.seed + 2 ** 31)
+    if S is None:
+        S = rng.uniform(-1, 1, (cfg.p, cfg.p)).astype(np.float32)
+
+    elem_sharding = NamedSharding(mesh, P("elements"))
+    repl_sharding = NamedSharding(mesh, P())
+    S_dev = jax.device_put(S, repl_sharding)
+
+    n = cfg.n_batches if max_batches is None else min(max_batches, cfg.n_batches)
+    gen = _batch_generator(cfg)
+
+    def stage(batch):
+        return {
+            k: jax.device_put(v, elem_sharding) for k, v in batch.items()
+        }
+
+    checksum = 0.0
+    t0 = time.perf_counter()
+    pending = None
+    staged = stage(next(gen))
+    for b in range(n):
+        nxt = None
+        if cfg.double_buffer and b + 1 < n:
+            # ping/pong: enqueue next transfer before waiting on compute
+            nxt = stage(next(gen))
+        out = compiled.batched_fn({"S": S_dev, **staged})
+        if pending is not None:
+            checksum += float(pending)  # blocks on the *previous* batch
+        pending = jnp.sum(out["v"])
+        if nxt is None and b + 1 < n:
+            nxt = stage(next(gen))
+        staged = nxt
+    checksum += float(pending)
+    wall = time.perf_counter() - t0
+    elements = n * cfg.batch_elements
+    return SimResult(
+        batches=n, elements=elements, wall_s=wall, checksum=checksum
+    )
+
+
+def achieved_gflops(res: SimResult, p: int) -> float:
+    """GFLOPS under the paper's Eq. (2)-(3) accounting."""
+    n_op = res.elements * flops_per_element(p)
+    return n_op / res.wall_s / 1e9 if res.wall_s > 0 else 0.0

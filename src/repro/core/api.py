@@ -1,0 +1,73 @@
+"""Public API of the tensor-expression compiler (DSL-to-executable flow).
+
+The one-call path from CFDlang source to a batched, optimized executable::
+
+    from repro.core import api
+    compiled = api.compile_cfdlang(src, element_vars=("u", "D", "v"))
+    out = compiled(S=S, D=D, u=u)        # D, u carry a leading element axis
+
+mirroring the paper's Figure 5 (DSL-to-C generation + C-to-system
+generation), with the compiler passes selectable the same way Olympus
+exposes its optimizations.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Sequence
+
+from . import dsl, emit, ir, rewrite
+from .precision import F32, F64, BF16, FIXED32, FIXED64, POLICIES
+
+
+def compile_cfdlang(
+    src: str,
+    *,
+    element_vars: Sequence[str] = (),
+    policy=F32,
+    optimize: bool = True,
+    backend: str = "xla",
+    vmem_budget: Optional[int] = None,
+    max_groups: Optional[int] = None,
+    pallas_impl: Optional[Callable] = None,
+    jit: bool = True,
+) -> emit.CompiledProgram:
+    """Parse, optimize, schedule, and compile a CFDlang program."""
+    if isinstance(policy, str):
+        policy = POLICIES[policy]
+    prog = dsl.parse(src, element_vars=element_vars)
+    if optimize:
+        prog = rewrite.optimize(prog)
+    return emit.compile_program(
+        prog,
+        policy=policy,
+        backend=backend,
+        vmem_budget=vmem_budget,
+        max_groups=max_groups,
+        pallas_impl=pallas_impl,
+        jit=jit,
+    )
+
+
+def compile_ir(
+    prog: ir.Program,
+    *,
+    policy=F32,
+    optimize: bool = True,
+    backend: str = "xla",
+    vmem_budget: Optional[int] = None,
+    max_groups: Optional[int] = None,
+    pallas_impl: Optional[Callable] = None,
+    jit: bool = True,
+) -> emit.CompiledProgram:
+    if isinstance(policy, str):
+        policy = POLICIES[policy]
+    if optimize:
+        prog = rewrite.optimize(prog)
+    return emit.compile_program(
+        prog,
+        policy=policy,
+        backend=backend,
+        vmem_budget=vmem_budget,
+        max_groups=max_groups,
+        pallas_impl=pallas_impl,
+        jit=jit,
+    )

@@ -1,0 +1,209 @@
+"""Operator scheduling: partition the tensor value graph into dataflow
+groups (paper section 3.4.3).
+
+The paper's heuristic, ported to the TPU cost model:
+
+  * start with the most aggressive partition -- one group per tensor value;
+  * collapse chains greedily under a *memory budget* (PLM/DSP on the FPGA,
+    VMEM bytes here) because fewer stages use fewer resources;
+  * the group with the longest interval (cycle estimate ~ sum of trip
+    counts ~ FLOPs here) lower-bounds the pipeline latency, so that
+    interval is used as the collapse budget: merging must never create a
+    group longer than the current critical group.
+
+On TPU the "streams" between groups are HBM round-trips (group boundary =
+materialized intermediate), while everything inside one group stays in
+VMEM of a single fused kernel.  So the schedule directly controls the
+memory-roofline term; the perf loop (EXPERIMENTS.md section Perf) iterates
+on this structure.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Set, Tuple
+
+from . import ir
+
+#: Default budget: a fused group's working set must fit comfortably in
+#: TPU v5e VMEM (128 MiB per core; keep half for double buffering).
+DEFAULT_VMEM_BUDGET = 64 * 1024 * 1024
+
+
+@dataclasses.dataclass
+class Group:
+    """One dataflow stage: a connected set of IR nodes."""
+
+    nodes: List[ir.Node]
+    #: values flowing in from other groups or program inputs
+    in_streams: List[ir.Node]
+    #: values consumed by later groups or program outputs
+    out_streams: List[ir.Node]
+    name: str = ""
+
+    @property
+    def flops(self) -> int:
+        return sum(n.flops() for n in self.nodes)
+
+    def working_set(self, bytes_per_scalar: int) -> int:
+        """Bytes resident while the group executes: inputs + outputs +
+        internal temporaries (before liveness sharing)."""
+        vals: Set[int] = set()
+        total = 0
+        for n in list(self.nodes) + list(self.in_streams):
+            if n.uid not in vals:
+                vals.add(n.uid)
+                total += n.size * bytes_per_scalar
+        return total
+
+
+@dataclasses.dataclass
+class Schedule:
+    groups: List[Group]
+    program: ir.Program
+
+    @property
+    def critical_flops(self) -> int:
+        """The longest group bounds pipeline throughput (paper 3.4.3)."""
+        return max(g.flops for g in self.groups) if self.groups else 0
+
+    @property
+    def stream_bytes(self) -> Dict[str, int]:
+        """Bytes crossing group boundaries (the HBM round-trip cost)."""
+        out = {}
+        for g in self.groups:
+            out[g.name] = sum(n.size for n in g.out_streams)
+        return out
+
+    def summary(self, bytes_per_scalar: int = 4) -> str:
+        lines = [
+            f"{'group':<12} {'nodes':>5} {'flops':>12} {'ws_bytes':>10} {'streams':>8}"
+        ]
+        for g in self.groups:
+            lines.append(
+                f"{g.name:<12} {len(g.nodes):>5} {g.flops:>12} "
+                f"{g.working_set(bytes_per_scalar):>10} {len(g.out_streams):>8}"
+            )
+        return "\n".join(lines)
+
+
+def schedule(
+    prog: ir.Program,
+    *,
+    vmem_budget: int = DEFAULT_VMEM_BUDGET,
+    bytes_per_scalar: int = 4,
+    max_groups: int | None = None,
+) -> Schedule:
+    """Greedy chain-collapse scheduling (paper heuristic).
+
+    ``max_groups`` optionally forces further collapsing (the paper's
+    1/2/3/7-compute-module experiments are reproduced by sweeping it).
+    """
+    order = [n for n in prog.toposort() if not isinstance(n, ir.Input)]
+    if not order:
+        return Schedule(groups=[], program=prog)
+
+    # --- initial partition: one group per value --------------------------
+    group_of: Dict[int, int] = {n.uid: i for i, n in enumerate(order)}
+    members: Dict[int, List[ir.Node]] = {i: [n] for i, n in enumerate(order)}
+
+    uses: Dict[int, List[ir.Node]] = {}
+    for n in order:
+        for op in n.operands():
+            uses.setdefault(op.uid, []).append(n)
+    outputs = {v.uid for v in prog.outputs.values()}
+
+    def group_flops(gid: int) -> int:
+        return sum(n.flops() for n in members[gid])
+
+    def group_ws(gid: int) -> int:
+        vals: Set[int] = set()
+        tot = 0
+        node_uids = {n.uid for n in members[gid]}
+        for n in members[gid]:
+            for v in (n, *n.operands()):
+                if v.uid not in vals:
+                    vals.add(v.uid)
+                    tot += v.size * bytes_per_scalar
+        return tot
+
+    critical = max(group_flops(i) for i in members)
+
+    # --- collapse chains: producer feeding a single consumer -------------
+    def try_merge(budget_flops: int) -> bool:
+        merged_any = False
+        for n in order:
+            gid = group_of[n.uid]
+            users = [u for u in uses.get(n.uid, []) if group_of[u.uid] != gid]
+            distinct = {group_of[u.uid] for u in users}
+            if len(distinct) != 1 or n.uid in outputs:
+                continue
+            tgt = distinct.pop()
+            combined_flops = group_flops(gid) + group_flops(tgt)
+            if combined_flops > budget_flops:
+                continue
+            # memory check on the union
+            union_nodes = members[gid] + members[tgt]
+            vals: Set[int] = set()
+            ws = 0
+            for m in union_nodes:
+                for v in (m, *m.operands()):
+                    if v.uid not in vals:
+                        vals.add(v.uid)
+                        ws += v.size * bytes_per_scalar
+            if ws > vmem_budget:
+                continue
+            for m in members[gid]:
+                group_of[m.uid] = tgt
+            members[tgt] = members[gid] + members[tgt]
+            del members[gid]
+            merged_any = True
+        return merged_any
+
+    # collapse under the critical interval first (never lengthen the
+    # critical path), then, if a stage-count target is given, relax.
+    while try_merge(critical):
+        pass
+    if max_groups is not None:
+        budget = critical
+        while len(members) > max_groups:
+            budget *= 2
+            if not try_merge(budget):
+                if budget > sum(n.flops() for n in order) * 4:
+                    break
+
+    # --- build Group objects in topo order --------------------------------
+    gids_in_order: List[int] = []
+    for n in order:
+        gid = group_of[n.uid]
+        if gid not in gids_in_order:
+            gids_in_order.append(gid)
+
+    groups: List[Group] = []
+    for idx, gid in enumerate(gids_in_order):
+        nodes = [n for n in order if group_of[n.uid] == gid]
+        node_uids = {n.uid for n in nodes}
+        ins: List[ir.Node] = []
+        seen_in: Set[int] = set()
+        for n in nodes:
+            for op in n.operands():
+                if op.uid not in node_uids and op.uid not in seen_in:
+                    seen_in.add(op.uid)
+                    ins.append(op)
+        outs: List[ir.Node] = []
+        for n in nodes:
+            external_use = any(
+                group_of[u.uid] != gid for u in uses.get(n.uid, [])
+            )
+            if external_use or n.uid in outputs:
+                outs.append(n)
+        groups.append(
+            Group(nodes=nodes, in_streams=ins, out_streams=outs,
+                  name=f"g{idx}")
+        )
+
+    # human-friendly names for the paper's canonical 3-stage split
+    if len(groups) == 3:
+        groups[0].name, groups[1].name, groups[2].name = (
+            "gemm", "mmult", "gemm_inv",
+        )
+    return Schedule(groups=groups, program=prog)

@@ -1,0 +1,4 @@
+from .pipeline import PrefetchPipeline
+from .synthetic import TokenStream, cfd_element_stream
+
+__all__ = ["PrefetchPipeline", "TokenStream", "cfd_element_stream"]

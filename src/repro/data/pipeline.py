@@ -1,0 +1,80 @@
+"""Double-buffered host->device prefetch (the paper's ping/pong channels,
+Fig. 14a, at the host-runtime level).
+
+A background thread stages batch k+1 onto devices (device_put against the
+batch shardings) while step k computes; the queue depth of 2 is exactly
+the paper's even/odd channel pair.  ``state()`` exposes the source step
+counter for checkpoint/resume.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+
+
+class PrefetchPipeline:
+    def __init__(
+        self,
+        source: Iterator[Dict[str, Any]],
+        *,
+        shardings: Any = None,
+        depth: int = 2,
+    ) -> None:
+        self.source = source
+        self.shardings = shardings
+        self.depth = depth
+        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._err: Optional[BaseException] = None
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _stage(self, batch: Dict[str, Any]) -> Dict[str, Any]:
+        if self.shardings is None:
+            return {k: jax.device_put(v) for k, v in batch.items()}
+        return {
+            k: jax.device_put(v, self.shardings[k]) for k, v in batch.items()
+        }
+
+    def _worker(self) -> None:
+        try:
+            for batch in self.source:
+                if self._stop.is_set():
+                    return
+                staged = self._stage(batch)
+                while not self._stop.is_set():
+                    try:
+                        self._q.put(staged, timeout=0.1)
+                        break
+                    except queue.Full:
+                        continue
+        except BaseException as e:  # surfaced on next __next__
+            self._err = e
+        finally:
+            self._q.put(None)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if item is None:
+            if self._err is not None:
+                raise self._err
+            raise StopIteration
+        return item
+
+    def state(self) -> Optional[Dict[str, int]]:
+        return self.source.state() if hasattr(self.source, "state") else None
+
+    def close(self) -> None:
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=2.0)

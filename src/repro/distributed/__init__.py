@@ -1,0 +1,5 @@
+"""Distribution layer: sharding rules (DP/TP/EP/SP), pipeline parallelism,
+and gradient compression."""
+from . import compression, pipeline, sharding
+
+__all__ = ["compression", "pipeline", "sharding"]

@@ -1,0 +1,73 @@
+"""Gradient compression: int8 quantized all-reduce with error feedback.
+
+Cross-pod (DCN) gradient reduction is the bandwidth-constrained collective
+at 1000+-node scale; 4x compression there is a standard distributed-
+optimization trick.  Design:
+
+  * per-tensor symmetric int8 quantization (scale = max|g| / 127);
+  * error feedback: the quantization residual is carried into the next
+    step's gradient (Karimireddy et al.), keeping SGD/Adam convergence;
+  * the reduce itself runs in int32 to avoid overflow, then dequantizes.
+
+``compressed_psum`` is used inside shard_map over the ``pod`` axis by the
+explicit-DP train-step variant (runtime/train.py); the default GSPMD path
+leaves reduction to XLA and skips compression.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-30) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_with_feedback(g: jax.Array, err: jax.Array):
+    """Returns (q, scale, new_err)."""
+    g_corr = g + err
+    q, scale = quantize(g_corr)
+    new_err = g_corr - dequantize(q, scale)
+    return q, scale, new_err
+
+
+def compressed_psum(g: jax.Array, err: jax.Array, axis: str):
+    """int8-quantized psum over ``axis`` with error feedback.
+
+    Scales are psum-maxed first so every participant uses a common scale;
+    the int reduce then runs losslessly in int32.
+    """
+    g_corr = g + err
+    local_scale = jnp.maximum(jnp.max(jnp.abs(g_corr)), 1e-30) / 127.0
+    scale = jax.lax.pmax(local_scale, axis)
+    q = jnp.clip(jnp.round(g_corr / scale), -127, 127).astype(jnp.int8)
+    new_err = g_corr - q.astype(jnp.float32) * scale
+    total = jax.lax.psum(q.astype(jnp.int32), axis)
+    n = jax.lax.psum(jnp.ones((), jnp.int32), axis)
+    mean = total.astype(jnp.float32) * scale / n.astype(jnp.float32)
+    return mean.astype(g.dtype), new_err
+
+
+def tree_compressed_psum(grads: Any, errs: Any, axis: str):
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(errs)
+    out_g, out_e = [], []
+    for g, e in zip(flat_g, flat_e):
+        m, ne = compressed_psum(g, e, axis)
+        out_g.append(m)
+        out_e.append(ne)
+    return treedef.unflatten(out_g), treedef.unflatten(out_e)
+
+
+def init_error_feedback(grads_shape: Any) -> Any:
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, jnp.float32), grads_shape
+    )

@@ -1,0 +1,235 @@
+"""Parameter / activation sharding rules (GSPMD PartitionSpecs).
+
+Megatron-style TP over the ``model`` axis, DP over ``pod``+``data``:
+
+  * embeddings & LM head: vocab-sharded (vocab-parallel cross entropy
+    falls out of GSPMD's handling of the sharded log_softmax reductions);
+  * attention: head-sharded QKV (column) / output row-sharded;
+  * MLP: column-parallel up/gate, row-parallel down;
+  * MoE: expert-parallel (experts over ``model``) -- dispatch/combine
+    scatter-gathers become all_to_all;
+  * mamba/xLSTM: inner-dim column/row split, state sharded on the inner
+    dim;
+  * norms/scalars: replicated.
+
+Rules are matched against flattened parameter path names, and specs are
+left-padded with None to the leaf rank (stacked-layer leading axes stay
+unsharded).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.config import ModelConfig
+
+#: (path regex, spec for trailing dims)
+PARAM_RULES: List[Tuple[str, Tuple]] = [
+    # embeddings / head
+    (r"embed/tok$", ("model", None)),
+    (r"head/w$", (None, "model")),
+    # attention
+    (r"(attn|self_attn|cross_attn)/wq/w$", (None, "model")),
+    (r"(attn|self_attn|cross_attn)/wk/w$", (None, "model")),
+    (r"(attn|self_attn|cross_attn)/wv/w$", (None, "model")),
+    (r"(attn|self_attn|cross_attn)/w[qkv]/b$", ("model",)),
+    (r"(attn|self_attn|cross_attn)/wo/w$", ("model", None)),
+    (r"(attn|self_attn|cross_attn)/wo/b$", (None,)),
+    (r"(q_norm|k_norm)/scale$", (None,)),
+    # dense MLP
+    (r"mlp/(gate|up)/w$", (None, "model")),
+    (r"mlp/(gate|up)/b$", ("model",)),
+    (r"mlp/down/w$", ("model", None)),
+    (r"mlp/down/b$", (None,)),
+    # MoE: expert parallel
+    (r"moe/router/w$", (None, None)),
+    (r"moe/w_(gate|up)$", ("model", None, None)),
+    (r"moe/w_down$", ("model", None, None)),
+    # mamba
+    (r"mamba/in_proj/w$", (None, "model")),
+    (r"mamba/conv_w$", (None, "model")),
+    (r"mamba/conv_b$", ("model",)),
+    (r"mamba/x_proj/w$", ("model", None)),
+    (r"mamba/dt_proj/w$", (None, "model")),
+    (r"mamba/dt_proj/b$", ("model",)),
+    (r"mamba/A_log$", ("model", None)),
+    (r"mamba/D$", ("model",)),
+    (r"mamba/out_proj/w$", ("model", None)),
+    # xLSTM
+    (r"core/w[zqkv]/w$", (None, "model")),
+    (r"core/w(i|f|o_gate)/w$", (None, "model")),
+    (r"core/w(i|f|o_gate|z|q|k|v)/b$", ("model",)),
+    (r"core/wo/w$", ("model", None)),
+    # norms and anything else scalar-ish: replicated (fallback below)
+]
+
+
+#: when True (set by the dry-run --dp-only), params replicate and the
+#: batch shards over EVERY mesh axis -- the right mapping for models too
+#: small to amortize TP collectives (see EXPERIMENTS.md section Perf).
+DP_ONLY = False
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def spec_for_param(path_str: str, ndim: int, mesh: Mesh) -> P:
+    if DP_ONLY:
+        return P()
+    axis_ok = set(mesh.axis_names)
+    for pat, trailing in PARAM_RULES:
+        if re.search(pat, path_str):
+            t = tuple(a if (a in axis_ok) else None for a in trailing)
+            pad = (None,) * (ndim - len(t))
+            return P(*(pad + t))
+    return P()  # replicated
+
+
+def _divisible(shape, spec: P, mesh: Mesh) -> P:
+    """Drop sharding on axes that do not divide evenly (e.g. 6 heads on a
+    16-way model axis for whisper-tiny): correctness first, GSPMD would
+    otherwise error."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    fixed = []
+    for dim, s in zip(shape, tuple(spec) + (None,) * (len(shape) - len(tuple(spec)))):
+        if s is None:
+            fixed.append(None)
+            continue
+        axes = s if isinstance(s, tuple) else (s,)
+        total = int(np.prod([sizes[a] for a in axes]))
+        fixed.append(s if dim % total == 0 else None)
+    return P(*fixed)
+
+
+def param_shardings(params_shape: Any, mesh: Mesh) -> Any:
+    """Map a params pytree (of ShapeDtypeStruct or arrays) to NamedShardings."""
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        spec = spec_for_param(ps, len(leaf.shape), mesh)
+        spec = _divisible(leaf.shape, spec, mesh)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def batch_shardings(batch_shape: Any, mesh: Mesh) -> Any:
+    """Shard the leading (global-batch) axis over the DP axes."""
+    dp = (tuple(mesh.axis_names) if DP_ONLY
+          else tuple(a for a in mesh.axis_names if a in ("pod", "data")))
+
+    def one(leaf):
+        if len(leaf.shape) == 0:
+            return NamedSharding(mesh, P())
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        total = int(np.prod([sizes[a] for a in dp]))
+        if leaf.shape[0] % total == 0:
+            return NamedSharding(
+                mesh, P(dp, *([None] * (len(leaf.shape) - 1)))
+            )
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map(one, batch_shape)
+
+
+def cache_shardings(cache_shape: Any, cfg: ModelConfig, mesh: Mesh,
+                    *, batch: int) -> Any:
+    """KV-cache / recurrent-state shardings for serving.
+
+    Preference order per leaf: shard batch over DP if divisible; shard the
+    kv-head axis over ``model`` if divisible; otherwise shard the longest
+    (sequence) axis over ``model`` (flash-decoding combine), else
+    replicate.  For batch=1 long-context decode this naturally picks the
+    sequence axis.
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    dp_total = int(np.prod([sizes[a] for a in dp]))
+    m = sizes.get("model", 1)
+
+    def one(path, leaf):
+        shape = leaf.shape
+        if len(shape) == 0:
+            return NamedSharding(mesh, P())
+        spec: List = [None] * len(shape)
+        # find the batch axis: the first axis equal to `batch`
+        b_ax = next((i for i, d in enumerate(shape) if d == batch), None)
+        used_model = False
+        if b_ax is not None and batch % dp_total == 0 and batch >= dp_total:
+            spec[b_ax] = dp
+        # kv-head / feature axis over model: prefer an axis == n_kv_heads
+        for i, d in enumerate(shape):
+            if i == b_ax:
+                continue
+            if d == cfg.n_kv_heads and d % m == 0:
+                spec[i] = "model"
+                used_model = True
+                break
+        if not used_model:
+            # longest remaining axis over model (sequence, inner dim, ...)
+            cand = max(
+                (d, i) for i, d in enumerate(shape) if i != b_ax
+            )[1] if len(shape) > (0 if b_ax is None else 1) else None
+            if cand is not None and shape[cand] % m == 0 and shape[cand] >= m:
+                spec[cand] = "model"
+        # batch not shardable over full dp: try just "data"
+        if b_ax is not None and spec[b_ax] is None:
+            d_sz = sizes.get("data", 1)
+            if batch % d_sz == 0 and batch >= d_sz:
+                spec[b_ax] = "data"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def extend_with_dp(shardings: Any, shapes: Any, mesh: Mesh) -> Any:
+    """Add data-parallel sharding on top of the TP specs (ZeRO/FSDP).
+
+    For each leaf, the first dimension that is still unsharded and divides
+    by the DP degree gets the DP axes.  Used for optimizer moments
+    (ZeRO-1) and for weight-gathered serving of very large models: the
+    stacked-layer leading axis usually absorbs it (e.g. 64 layers over 16
+    data shards), otherwise a feature dim does.
+    """
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp_total = int(np.prod([sizes[a] for a in dp]))
+
+    def one(sh, leaf):
+        spec = list(tuple(sh.spec) + (None,) * (len(leaf.shape) - len(tuple(sh.spec))))
+        for i, d in enumerate(leaf.shape):
+            if spec[i] is None and d % dp_total == 0 and d >= dp_total:
+                spec[i] = dp if len(dp) > 1 else dp[0]
+                break
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map(one, shardings, shapes)
+
+
+def params_fit_replicated_dp(params_shape: Any, mesh: Mesh,
+                             hbm_budget: int = 8 * 2 ** 30) -> bool:
+    """True if TP-only params fit the per-chip budget (else use FSDP)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    m = sizes.get("model", 1)
+    total = sum(
+        int(np.prod(l.shape)) * jax.numpy.dtype(l.dtype).itemsize
+        for l in jax.tree_util.tree_leaves(params_shape)
+    )
+    return total / m <= hbm_budget

@@ -1,0 +1,4 @@
+from . import ops, ref
+from .attention import flash_attention_pallas
+
+__all__ = ["ops", "ref", "flash_attention_pallas"]

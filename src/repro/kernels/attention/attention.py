@@ -1,0 +1,137 @@
+"""Flash attention Pallas TPU kernel with GQA and causal masking.
+
+Tiling (BlockSpec):
+  grid = (G, Tq/bq, Tk/bk) over head-folded arrays
+    q (G, Tq, d) blocked (1, bq, d)
+    k/v (Gkv, Tk, d) blocked (1, bk, d); the head index_map folds the GQA
+    group mapping  g_kv = (g // Hq) * Hkv + (g %% Hq) // (Hq/Hkv)
+  o (G, Tq, d) blocked (1, bq, d); written once, on the last kv step.
+
+Running softmax state (m, l, acc) lives in VMEM scratch across the kv
+grid dimension (standard online-softmax recurrence).  Causal blocks above
+the diagonal are skipped with pl.when -- the Mosaic grid still visits
+them, but no compute or DMA-consumed writes are issued.
+
+VMEM budget per step: bq*d + 2*bk*d + bq*bk + bq*d (acc) floats; with
+bq=bk=512, d=128 and f32 accumulation that is ~1.4 MB -- far under the
+64 MB working budget, leaving room for Mosaic's automatic double
+buffering of the k/v streams (the paper's ping/pong, one level down).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, bq: int, bk: int, blocks_k: int,
+            q_offset: int):
+    ki = pl.program_id(2)
+    qi = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # causal: visit only blocks with any (qpos >= kpos) overlap
+    q_end = (qi + 1) * bq - 1 + q_offset
+    visit = (q_end >= ki * bk) if causal else (ki >= 0)
+
+    @pl.when(visit)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)          # (bq, d)
+        k = k_ref[0].astype(jnp.float32)          # (bk, d)
+        v = v_ref[0].astype(jnp.float32)          # (bk, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                                  # (bq, bk)
+        if causal:
+            qpos = qi * bq + jax.lax.broadcasted_iota(
+                jnp.int32, (bq, bk), 0) + q_offset
+            kpos = ki * bk + jax.lax.broadcasted_iota(
+                jnp.int32, (bq, bk), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_scr[...]                        # (bq, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)                     # (bq, bk)
+        corr = jnp.exp(m_prev - m_new)             # (bq, 1)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_scr[...] = m_new
+
+    @pl.when(ki == blocks_k - 1)
+    def _finalize():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "n_q_heads", "n_kv_heads", "causal", "scale", "block_q", "block_k",
+        "interpret",
+    ),
+)
+def flash_attention_pallas(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    n_q_heads: int,
+    n_kv_heads: int,
+    causal: bool = True,
+    scale: float | None = None,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """q: (G, Tq, d) with G = batch*n_q_heads; k/v: (Gkv, Tk, d)."""
+    G, Tq, d = q.shape
+    Gkv, Tk, _ = k.shape
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    bq = min(block_q, Tq)
+    bk = min(block_k, Tk)
+    if Tq % bq or Tk % bk:
+        raise ValueError(f"seq lens ({Tq},{Tk}) not divisible by blocks ({bq},{bk})")
+    group = n_q_heads // n_kv_heads
+    blocks_k = Tk // bk
+    q_offset = Tk - Tq  # decode/churn alignment: queries sit at the end
+
+    def kv_head(g):
+        return (g // n_q_heads) * n_kv_heads + (g % n_q_heads) // group
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, bq=bq, bk=bk,
+        blocks_k=blocks_k, q_offset=q_offset,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(G, Tq // bq, blocks_k),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda g, qi, ki: (g, qi, 0)),
+            pl.BlockSpec((1, bk, d), lambda g, qi, ki: (kv_head(g), ki, 0)),
+            pl.BlockSpec((1, bk, d), lambda g, qi, ki: (kv_head(g), ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda g, qi, ki: (g, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),   # running max m
+            pltpu.VMEM((bq, 1), jnp.float32),   # running denom l
+            pltpu.VMEM((bq, d), jnp.float32),   # unnormalized accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

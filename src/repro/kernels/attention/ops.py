@@ -1,0 +1,80 @@
+"""Public attention entry point with implementation switch.
+
+Models call ``multi_head_attention`` with (B, T, H, d) tensors; head
+folding to the kernel layout happens here.  ``impl='xla'`` (default on
+CPU / in dry-runs) evaluates the same math with jnp ops so that the
+512-device lowering contains plain dots; ``impl='pallas'`` dispatches the
+flash kernel on TPU; ``impl='interpret'`` validates the kernel on CPU.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Literal, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .attention import flash_attention_pallas
+from .ref import attention_ref
+from .xla_flash import flash_attention_xla
+
+Impl = Literal["auto", "pallas", "interpret", "xla", "xla_flash"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _xla_attention(q, k, v, *, causal: bool, scale: float):
+    """(B, Hq, Tq, d) x (B, Hkv, Tk, d) GQA attention in plain XLA ops."""
+    B, Hq, Tq, d = q.shape
+    _, Hkv, Tk, _ = k.shape
+    group = Hq // Hkv
+    qh = q.reshape(B, Hkv, group, Tq, d)
+    s = jnp.einsum(
+        "bhgqd,bhkd->bhgqk", qh, k, preferred_element_type=jnp.float32
+    ) * scale
+    if causal:
+        qpos = jnp.arange(Tq)[:, None] + (Tk - Tq)
+        kpos = jnp.arange(Tk)[None, :]
+        s = jnp.where((qpos >= kpos)[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum(
+        "bhgqk,bhkd->bhgqd", p.astype(v.dtype), v,
+        preferred_element_type=jnp.float32,
+    )
+    return o.reshape(B, Hq, Tq, d).astype(q.dtype)
+
+
+def multi_head_attention(
+    q: jax.Array,   # (B, Hq, Tq, d)
+    k: jax.Array,   # (B, Hkv, Tk, d)
+    v: jax.Array,   # (B, Hkv, Tk, d)
+    *,
+    causal: bool = True,
+    scale: Optional[float] = None,
+    impl: Impl = "auto",
+    block_q: int = 512,
+    block_k: int = 512,
+) -> jax.Array:
+    B, Hq, Tq, d = q.shape
+    _, Hkv, Tk, _ = k.shape
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "xla"
+    if impl == "xla_flash":
+        return flash_attention_xla(q, k, v, causal=causal, scale=scale)
+    if impl == "xla":
+        return _xla_attention(q, k, v, causal=causal, scale=scale)
+
+    qf = q.reshape(B * Hq, Tq, d)
+    kf = k.reshape(B * Hkv, Tk, d)
+    vf = v.reshape(B * Hkv, Tk, d)
+    out = flash_attention_pallas(
+        qf, kf, vf,
+        n_q_heads=Hq, n_kv_heads=Hkv, causal=causal, scale=scale,
+        block_q=block_q, block_k=block_k,
+        interpret=(impl == "interpret"),
+    )
+    return out.reshape(B, Hq, Tq, d)

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for flash attention (GQA + causal).
+
+Shapes (head-folded layout used by the kernel):
+  q: (G, Tq, d)  where G = batch * n_q_heads
+  k, v: (Gkv, Tk, d) where Gkv = batch * n_kv_heads
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, n_q_heads: int, n_kv_heads: int,
+                  causal: bool = True, scale: float | None = None):
+    G, Tq, d = q.shape
+    Gkv, Tk, _ = k.shape
+    batch = G // n_q_heads
+    group = n_q_heads // n_kv_heads
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+
+    qh = q.reshape(batch, n_kv_heads, group, Tq, d)
+    kh = k.reshape(batch, n_kv_heads, 1, Tk, d)
+    vh = v.reshape(batch, n_kv_heads, 1, Tk, d)
+    s = jnp.einsum("bhgqd,bhgkd->bhgqk", qh.astype(jnp.float32),
+                   jnp.broadcast_to(kh, qh.shape[:3] + (Tk, d)).astype(jnp.float32))
+    s = s * scale
+    if causal:
+        qpos = jnp.arange(Tq)[:, None] + (Tk - Tq)
+        kpos = jnp.arange(Tk)[None, :]
+        mask = qpos >= kpos
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bhgqk,bhgkd->bhgqd", p,
+                   jnp.broadcast_to(vh, qh.shape[:3] + (Tk, d)).astype(jnp.float32))
+    return o.reshape(G, Tq, d).astype(q.dtype)

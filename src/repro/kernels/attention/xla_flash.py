@@ -1,0 +1,166 @@
+"""Flash attention in pure XLA ops with a custom VJP.
+
+The Pallas kernel (attention.py) is the TPU fast path, but it cannot lower
+through the CPU-backed 512-device dry-run.  This module implements the
+same online-softmax dataflow with `lax.scan` over KV chunks and a
+hand-written backward pass (recompute-per-chunk), so that
+
+  * no (Tq, Tk) score matrix is ever materialized (the memory-roofline
+    killer at 4k-32k sequence lengths), and
+  * backward memory is O(T d) residuals (q, k, v, o, LSE) instead of the
+    O(T^2) softmax residuals XLA would otherwise save.
+
+This is the paper's FIFO-streamed dataflow idea applied to attention:
+stage boundaries that would round-trip HBM are collapsed into a scanned
+chunk pipeline.  Used by ops.multi_head_attention(impl='xla') for long
+sequences and by the dry-run cells.
+
+Layout: q (B, Hq, Tq, d), k/v (B, Hkv, Tk, d); GQA folds the group into
+the head dim on entry.  Causal masking assumes queries occupy the LAST
+Tq positions of the Tk context (prefill/train: Tq == Tk).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+#: default KV chunk width; the scan-cost probes temporarily raise this to
+#: the full context so the single-trip scan body carries the whole cost
+#: (XLA counts while bodies once -- see analysis.scancost).
+DEFAULT_CHUNK = 1024
+
+
+def _chunk(x, n):
+    """(B, H, T, d) -> (n_chunks, B, H, W, d)"""
+    B, H, T, d = x.shape
+    return x.reshape(B, H, n, T // n, d).transpose(2, 0, 1, 3, 4)
+
+
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(3, 4, 5)
+)
+def _flash(q, k, v, scale: float, causal: bool, chunk: int):
+    o, _ = _flash_fwd_impl(q, k, v, scale, causal, chunk)
+    return o
+
+
+def _flash_fwd_impl(q, k, v, scale, causal, chunk):
+    B, H, Tq, d = q.shape
+    Tk = k.shape[2]
+    n = max(1, Tk // chunk)
+    W = Tk // n
+    ks = _chunk(k, n)
+    vs = _chunk(v, n)
+    q_off = Tk - Tq
+    qpos = q_off + jnp.arange(Tq)
+
+    def step(carry, inp):
+        m, l, acc, j = carry[0], carry[1], carry[2], carry[3]
+        kj, vj = inp
+        s = jnp.einsum("bhqd,bhkd->bhqk", q, kj,
+                       preferred_element_type=jnp.float32) * scale
+        if causal:
+            kpos = j * W + jnp.arange(W)
+            mask = qpos[:, None] >= kpos[None, :]
+            s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bhkd->bhqd", p.astype(vj.dtype), vj,
+            preferred_element_type=jnp.float32,
+        )
+        return (m_new, l, acc, j + 1), None
+
+    m0 = jnp.full((B, H, Tq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, Tq), jnp.float32)
+    a0 = jnp.zeros((B, H, Tq, d), jnp.float32)
+    (m, l, acc, _), _ = jax.lax.scan(step, (m0, l0, a0, 0), (ks, vs))
+    l_safe = jnp.where(l == 0.0, 1.0, l)
+    o = (acc / l_safe[..., None]).astype(q.dtype)
+    lse = m + jnp.log(l_safe)
+    return o, lse
+
+
+def _flash_fwd(q, k, v, scale, causal, chunk):
+    o, lse = _flash_fwd_impl(q, k, v, scale, causal, chunk)
+    return o, (q, k, v, o, lse)
+
+
+def _flash_bwd(scale, causal, chunk, res, do):
+    q, k, v, o, lse = res
+    B, H, Tq, d = q.shape
+    Tk = k.shape[2]
+    n = max(1, Tk // chunk)
+    W = Tk // n
+    ks = _chunk(k, n)
+    vs = _chunk(v, n)
+    q_off = Tk - Tq
+    qpos = q_off + jnp.arange(Tq)
+    dof = do.astype(jnp.float32)
+    # D_i = rowsum(do * o)
+    Dm = jnp.sum(dof * o.astype(jnp.float32), axis=-1)  # (B,H,Tq)
+
+    def step(dq, inp):
+        kj, vj, j = inp
+        s = jnp.einsum("bhqd,bhkd->bhqk", q, kj,
+                       preferred_element_type=jnp.float32) * scale
+        if causal:
+            kpos = j * W + jnp.arange(W)
+            mask = qpos[:, None] >= kpos[None, :]
+            s = jnp.where(mask[None, None], s, NEG_INF)
+        p = jnp.exp(s - lse[..., None])                  # (B,H,Tq,W)
+        dv_j = jnp.einsum("bhqk,bhqd->bhkd", p, dof,
+                          preferred_element_type=jnp.float32)
+        dp = jnp.einsum("bhqd,bhkd->bhqk", dof, vj.astype(jnp.float32),
+                        preferred_element_type=jnp.float32)
+        ds = p * (dp - Dm[..., None]) * scale
+        dq = dq + jnp.einsum("bhqk,bhkd->bhqd", ds, kj.astype(jnp.float32),
+                             preferred_element_type=jnp.float32)
+        dk_j = jnp.einsum("bhqk,bhqd->bhkd", ds, q.astype(jnp.float32),
+                          preferred_element_type=jnp.float32)
+        return dq, (dk_j, dv_j)
+
+    dq0 = jnp.zeros((B, H, Tq, d), jnp.float32)
+    dq, (dks, dvs) = jax.lax.scan(
+        step, dq0, (ks, vs, jnp.arange(n))
+    )
+    dk = dks.transpose(1, 2, 0, 3, 4).reshape(B, H, Tk, d)
+    dv = dvs.transpose(1, 2, 0, 3, 4).reshape(B, H, Tk, d)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention_xla(
+    q: jax.Array,   # (B, Hq, Tq, d)
+    k: jax.Array,   # (B, Hkv, Tk, d)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    chunk: int | None = None,
+) -> jax.Array:
+    if chunk is None:
+        chunk = DEFAULT_CHUNK
+    B, Hq, Tq, d = q.shape
+    _, Hkv, Tk, _ = k.shape
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    group = Hq // Hkv
+    # GQA: repeat KV heads into the group (einsum-level broadcast keeps
+    # this a view until the chunked dots consume it)
+    if group > 1:
+        k = jnp.repeat(k, group, axis=1)
+        v = jnp.repeat(v, group, axis=1)
+    chunk = min(chunk, Tk)
+    if Tk % chunk:
+        chunk = Tk  # fallback: single chunk
+    return _flash(q, k, v, scale, causal, chunk)

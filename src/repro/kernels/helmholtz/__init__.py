@@ -1,0 +1,4 @@
+from . import ops, ref
+from .helmholtz import inverse_helmholtz_pallas
+
+__all__ = ["ops", "ref", "inverse_helmholtz_pallas"]

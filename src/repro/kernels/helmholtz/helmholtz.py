@@ -1,0 +1,119 @@
+"""Fused Inverse-Helmholtz Pallas TPU kernel -- the paper's dataflow CU.
+
+Adaptation notes (DESIGN.md section 2):
+
+  * The FPGA CU streams one element through 7 pipelined loop nests with
+    FIFO links; here a *block of BE elements* flows through the same 7
+    stages entirely inside VMEM -- crossing a stage boundary never touches
+    HBM, which is the TPU equivalent of the FIFO stream.
+  * "Lane packing" (splitting the 256-bit AXI bus into parallel lanes) is
+    realized by packing the element axis into the GEMM minor dimension:
+    every contraction is one (p x p) x (p x BE*p^2) matmul whose minor dim
+    is a multiple of 128, saturating MXU lanes instead of AXI lanes.
+  * Host<->HBM double buffering is Pallas grid pipelining: while block g
+    computes, block g+1's DMA from HBM is in flight (automatic ping/pong).
+  * Mnemosyne-style sharing: the t/r intermediates reuse one VMEM scratch
+    allocation (disjoint lifetimes inside a stage chain).
+
+Grid: (E // BE,).  Refs carry one element block; S is re-fetched per step
+(index_map pins block 0) which Mosaic keeps resident in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BLOCK_ELEMENTS = 128
+
+
+def _contract_first(S, x, p: int, be: int):
+    """y[a, e, m, n] = sum_l S[l, a] * x[l, e, m, n] as one MXU GEMM.
+
+    x arrives as (l, BE*p*p) row-major with l major; lhs is (p, p).
+    dot_general: contract S dim 0 with x dim 0 -> (a, BE*p*p).
+    """
+    return jax.lax.dot_general(
+        S, x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _helmholtz_block(S, D, u, p: int, be: int):
+    """Compute one element block entirely in registers/VMEM.
+
+    u, D: (BE, p, p, p). Returns v: (BE, p, p, p).
+
+    Each contraction rotates the contracted axis to the front and packs
+    (BE, remaining p^2) into the GEMM minor dimension.
+    """
+    f32 = jnp.float32
+
+    def rotate_contract(M, x):
+        # x: (BE, p, p, p) contracting over axis 1 (current leading p).
+        # -> (p_l, BE * p * p) GEMM, result axis becomes the *last* p axis,
+        # so three applications restore the original axis order.
+        xt = jnp.transpose(x, (1, 0, 2, 3))          # (l, BE, p, p)
+        xm = xt.reshape(p, be * p * p)               # (l, BE*p*p)
+        ym = jax.lax.dot_general(
+            M, xm, (((0,), (0,)), ((), ())), preferred_element_type=f32
+        )                                            # (a, BE*p*p)
+        y = ym.reshape(p, be, p, p)
+        return jnp.transpose(y, (1, 2, 3, 0))        # (BE, p, p, a)
+
+    # ---- stage 1-3: t = (S^T (x)3) u  (t_ijk = sum S_il S_jm S_kn u_lmn)
+    # contract l with S_il => lhs must be S with its *second* axis as the
+    # contracted one: pass S and contract dim 1 == use S^T in rotate form.
+    t = u.astype(f32)
+    for _ in range(3):
+        t = rotate_contract(jnp.transpose(S), t)     # contracts S_il over l
+    # ---- stage 4: Hadamard
+    r = D.astype(f32) * t
+    # ---- stage 5-7: v = (S (x)3) r   (v_ijk = sum S_li S_mj S_nk r_lmn)
+    v = r
+    for _ in range(3):
+        v = rotate_contract(S, v)                    # contracts S_li over l
+    return v
+
+
+def _kernel(S_ref, D_ref, u_ref, v_ref, *, p: int, be: int):
+    S = S_ref[...]
+    D = D_ref[...]
+    u = u_ref[...]
+    v_ref[...] = _helmholtz_block(S, D, u, p, be).astype(v_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_elements", "interpret")
+)
+def inverse_helmholtz_pallas(
+    S: jax.Array,
+    D: jax.Array,
+    u: jax.Array,
+    *,
+    block_elements: int = DEFAULT_BLOCK_ELEMENTS,
+    interpret: bool = False,
+) -> jax.Array:
+    """Batched fused Inverse Helmholtz.  S: (p,p); D,u: (E,p,p,p)."""
+    E, p = u.shape[0], u.shape[1]
+    be = min(block_elements, E)
+    if E % be != 0:
+        raise ValueError(f"element count {E} not divisible by block {be}")
+
+    grid = (E // be,)
+    kernel = functools.partial(_kernel, p=p, be=be)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((p, p), lambda g: (0, 0)),          # S resident
+            pl.BlockSpec((be, p, p, p), lambda g: (g, 0, 0, 0)),
+            pl.BlockSpec((be, p, p, p), lambda g: (g, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((be, p, p, p), lambda g: (g, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(u.shape, u.dtype),
+        interpret=interpret,
+    )(S, D, u)

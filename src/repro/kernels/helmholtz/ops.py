@@ -1,0 +1,58 @@
+"""Jit'd public wrappers for the fused Inverse-Helmholtz kernel.
+
+``inverse_helmholtz(S, D, u)`` picks the best available implementation:
+the Pallas kernel on TPU, interpret-mode Pallas when explicitly requested
+(CPU validation), and the pure-jnp reference otherwise.  The signature is
+what ``repro.core.emit.compile_program(backend='pallas')`` expects as
+``pallas_impl`` for the Inverse-Helmholtz program.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from .helmholtz import inverse_helmholtz_pallas, DEFAULT_BLOCK_ELEMENTS
+from .ref import inverse_helmholtz_ref
+
+Impl = Literal["auto", "pallas", "interpret", "xla"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def inverse_helmholtz(
+    S: jax.Array,
+    D: jax.Array,
+    u: jax.Array,
+    *,
+    impl: Impl = "auto",
+    block_elements: int = DEFAULT_BLOCK_ELEMENTS,
+) -> jax.Array:
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "xla"
+    if impl == "pallas":
+        return inverse_helmholtz_pallas(
+            S, D, u, block_elements=block_elements
+        )
+    if impl == "interpret":
+        return inverse_helmholtz_pallas(
+            S, D, u, block_elements=block_elements, interpret=True
+        )
+    return jax.jit(inverse_helmholtz_ref)(S, D, u)
+
+
+def make_pallas_impl(impl: Impl = "auto", block_elements: int = DEFAULT_BLOCK_ELEMENTS):
+    """Adapter for core.emit.compile_program(backend='pallas')."""
+
+    def batched_fn(env):
+        v = inverse_helmholtz(
+            env["S"], env["D"], env["u"], impl=impl,
+            block_elements=block_elements,
+        )
+        return {"v": v}
+
+    return batched_fn

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the fused Inverse-Helmholtz kernel.
+
+Shapes: S (p, p) shared; D, u (E, p, p, p) per element; out v (E, p, p, p).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def inverse_helmholtz_ref(S, D, u):
+    t = jnp.einsum("il,jm,kn,elmn->eijk", S, S, S, u)
+    r = D * t
+    v = jnp.einsum("li,mj,nk,elmn->eijk", S, S, S, r)
+    return v

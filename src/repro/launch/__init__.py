@@ -1,0 +1,2 @@
+"""Launchers: mesh construction, the multi-pod dry-run driver, and the
+train/serve entry points."""

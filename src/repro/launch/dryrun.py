@@ -1,0 +1,382 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count on first
+# initialization.  The 512 placeholder host devices exist only for this
+# driver; tests/benchmarks see the real device count.
+
+"""Multi-pod dry-run driver.
+
+For every (architecture x input-shape) cell, build the appropriate step
+function (train_step / prefill / decode), lower it with production
+in/out shardings on the single-pod 16x16 mesh and the 2x16x16 multi-pod
+mesh, ``.compile()`` it, and record:
+
+  * ``memory_analysis()``  -- proves the partitioned program fits;
+  * ``cost_analysis()``    -- per-device FLOPs / bytes for the roofline;
+  * collective bytes parsed from the post-SPMD HLO.
+
+Results land in ``results/dryrun/<arch>__<shape>__<mesh>.json`` and feed
+EXPERIMENTS.md sections Dry-run / Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch internlm2-1.8b \
+      --shape train_4k --mesh single           # one cell
+  PYTHONPATH=src python -m repro.launch.dryrun --all                 # sweep
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .. import configs
+from ..analysis import roofline, scancost
+from ..configs import shapes as shape_mod
+from ..distributed import sharding as shard_rules
+from ..models import build_model
+from ..models.config import ModelConfig
+from ..optim import AdamWConfig
+from ..runtime.train import make_train_step
+from . import mesh as mesh_mod
+
+RESULTS_DIR = os.path.join("results", "dryrun")
+
+
+_CAP_FACTOR_OVERRIDE: Optional[float] = None
+
+
+def _moe_capacity(cfg: ModelConfig, n_tokens: int) -> Optional[int]:
+    if cfg.moe is None:
+        return None
+    m = cfg.moe
+    f = _CAP_FACTOR_OVERRIDE if _CAP_FACTOR_OVERRIDE else m.capacity_factor
+    cap = int(n_tokens * m.top_k / m.n_experts * f)
+    return max(cap, 8)
+
+
+def _active_params(cfg: ModelConfig) -> int:
+    """Active parameter count for MODEL_FLOPS (MoE: top_k of n_experts)."""
+    total = cfg.param_count()
+    if cfg.moe is None:
+        return total
+    # subtract inactive expert fraction
+    m = cfg.moe
+    d = cfg.d_model
+    expert = (3 if cfg.act == "swiglu" else 2) * d * m.d_ff_expert
+    if cfg.family == "moe":
+        n_moe_layers = cfg.n_layers
+    else:  # jamba: MoE on odd layers
+        n_moe_layers = cfg.n_layers // 2
+    inactive = n_moe_layers * (m.n_experts - m.top_k) * expert
+    return total - inactive
+
+
+def build_cell(cfg: ModelConfig, shape_name: str, mesh,
+               attn_impl: str = "xla",
+               grad_accum: int = 1) -> Dict[str, Any]:
+    """Returns dict with 'fn', 'args' (ShapeDtypeStructs), 'in_shardings',
+    'out_shardings', 'model_flops'."""
+    spec = shape_mod.SHAPES[shape_name]
+    model = build_model(cfg, attn_impl=attn_impl)
+    key = jax.random.PRNGKey(0)
+
+    params_shape = jax.eval_shape(model.init, key)
+    params_sh = shard_rules.param_shardings(params_shape, mesh)
+    batch_specs = shape_mod.input_specs(cfg, shape_name)
+    n_tokens = spec.global_batch * spec.seq_len
+    cap = _moe_capacity(cfg, n_tokens)
+
+    if spec.kind == "train":
+        opt = AdamWConfig()
+        step = make_train_step(
+            model, opt, moe_capacity=cap, grad_accum=grad_accum
+        )
+
+        def state_shape():
+            from ..optim import adamw_init
+            opt_shape = jax.eval_shape(adamw_init, params_shape)
+            return {
+                "params": params_shape,
+                "opt_state": opt_shape,
+                "step": jax.ShapeDtypeStruct((), jnp.int32),
+            }
+
+        st_shape = state_shape()
+        # ZeRO-1: optimizer moments additionally sharded over the DP axes
+        # (the stacked-layer axis usually absorbs it).
+        moments_sh = shard_rules.extend_with_dp(params_sh, params_shape, mesh)
+        # FSDP the params themselves when TP-only residency is too large
+        if not shard_rules.params_fit_replicated_dp(params_shape, mesh):
+            params_sh = moments_sh
+        opt_sh = {
+            "mu": moments_sh,
+            "nu": moments_sh,
+            "step": shard_rules.replicated(mesh),
+        }
+        state_sh = {
+            "params": params_sh,
+            "opt_state": opt_sh,
+            "step": shard_rules.replicated(mesh),
+        }
+        batch_sh = shard_rules.batch_shardings(batch_specs, mesh)
+        return {
+            "fn": step,
+            "args": (st_shape, batch_specs),
+            "in_shardings": (state_sh, batch_sh),
+            "out_shardings": (state_sh, None),
+            "donate_argnums": (0,),
+            "model_flops": roofline.model_flops(
+                params=cfg.param_count(), tokens=n_tokens, kind="train",
+                active_params=_active_params(cfg),
+            ),
+        }
+
+    # serving cells: weight-gathered (FSDP-style) placement when the model
+    # is too large for TP-only residency
+    if not shard_rules.params_fit_replicated_dp(params_shape, mesh):
+        params_sh = shard_rules.extend_with_dp(params_sh, params_shape, mesh)
+
+    if spec.kind == "prefill":
+        cache_shape = jax.eval_shape(
+            lambda: model.init_cache(spec.global_batch, spec.seq_len)
+        )
+        cache_sh = shard_rules.cache_shardings(
+            cache_shape, cfg, mesh, batch=spec.global_batch
+        )
+
+        def prefill(params, batch, cache):
+            return model.prefill(params, batch, cache, moe_capacity=cap)
+
+        batch_sh = shard_rules.batch_shardings(batch_specs, mesh)
+        return {
+            "fn": prefill,
+            "args": (params_shape, batch_specs, cache_shape),
+            "in_shardings": (params_sh, batch_sh, cache_sh),
+            "out_shardings": (None, cache_sh),
+            "donate_argnums": (2,),
+            "model_flops": roofline.model_flops(
+                params=cfg.param_count(), tokens=n_tokens, kind="prefill",
+                active_params=_active_params(cfg),
+            ),
+        }
+
+    # decode: one token against a seq_len cache
+    cache_shape = jax.eval_shape(
+        lambda: model.init_cache(spec.global_batch, spec.seq_len)
+    )
+    cache_sh = shard_rules.cache_shardings(
+        cache_shape, cfg, mesh, batch=spec.global_batch
+    )
+    token_spec = jax.ShapeDtypeStruct((spec.global_batch,), jnp.int32)
+    idx_spec = jax.ShapeDtypeStruct((), jnp.int32)
+    dcap = _moe_capacity(cfg, spec.global_batch)
+
+    def decode(params, token, cache, cache_index):
+        return model.decode_step(
+            params, token, cache, cache_index, moe_capacity=dcap
+        )
+
+    tok_sh = shard_rules.batch_shardings(
+        {"token": token_spec}, mesh
+    )["token"]
+    return {
+        "fn": decode,
+        "args": (params_shape, token_spec, cache_shape, idx_spec),
+        "in_shardings": (
+            params_sh, tok_sh, cache_sh, shard_rules.replicated(mesh)
+        ),
+        "out_shardings": (None, cache_sh),
+        "donate_argnums": (2,),
+        "model_flops": roofline.model_flops(
+            params=cfg.param_count(), tokens=spec.global_batch,
+            kind="decode", active_params=_active_params(cfg),
+        ),
+    }
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             *, results_dir: str = RESULTS_DIR,
+             attn_impl: str = "xla",
+             mlstm_chunk: Optional[int] = None,
+             grad_accum: int = 1,
+             dp_only: bool = False,
+             variant: str = "baseline") -> Dict[str, Any]:
+    cfg = configs.get(arch)
+    skip = shape_mod.applicable(cfg, shape_name)
+    record: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "variant": variant, "attn_impl": attn_impl,
+        "mlstm_chunk": mlstm_chunk,
+    }
+    from ..models import ssm as ssm_mod
+    ssm_mod.MLSTM_CHUNK = mlstm_chunk
+    if skip is not None:
+        record["status"] = "skipped"
+        record["reason"] = skip
+        _write(record, results_dir)
+        return record
+
+    mesh = mesh_mod.make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    chips = mesh.devices.size
+    # EP annotation: grouped dispatch -- one group per DP shard, experts
+    # over the model axis (GShard 2D layout)
+    from ..models import moe as moe_mod
+    import numpy as _np
+    dp_axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp_total = int(_np.prod([sizes[a] for a in dp_axes])) if dp_axes else 1
+    if dp_only:
+        # model axis re-purposed as DP: replicated experts, local dispatch
+        # (groups sharded over EVERY axis; experts unsharded)
+        moe_mod.set_ep_sharding(
+            None, tuple(mesh.axis_names), num_groups=mesh.devices.size
+        )
+        shard_rules.DP_ONLY = True
+    else:
+        moe_mod.set_ep_sharding("model", dp_axes, num_groups=dp_total)
+        shard_rules.DP_ONLY = False
+    t0 = time.time()
+    try:
+        cell = build_cell(cfg, shape_name, mesh, attn_impl=attn_impl,
+                          grad_accum=grad_accum)
+        with mesh:
+            jitted = jax.jit(
+                cell["fn"],
+                in_shardings=cell["in_shardings"],
+                out_shardings=cell["out_shardings"],
+                donate_argnums=cell.get("donate_argnums", ()),
+            )
+            lowered = jitted.lower(*cell["args"])
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        ma = compiled.memory_analysis()
+        # scan-body cost correction (XLA counts while bodies once)
+        model = build_model(cfg, attn_impl=attn_impl)
+        params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        spec = shape_mod.SHAPES[shape_name]
+        corr = scancost.corrections(
+            cfg, shape_name, mesh, model, params_shape,
+            moe_capacity=_moe_capacity(
+                cfg, spec.global_batch * spec.seq_len
+            ) if spec.kind != "decode" else _moe_capacity(
+                cfg, spec.global_batch
+            ),
+            attn_impl=attn_impl,
+        )
+        report = roofline.analyze(
+            compiled, arch=arch, shape=shape_name, mesh_name=mesh_kind,
+            chips=chips, model_flops_value=cell["model_flops"],
+            extra_flops=corr["flops"], extra_bytes=corr["bytes"],
+        )
+        report.coll_bytes += corr.get("coll", 0.0)
+        record["scan_correction"] = {
+            "flops": corr["flops"], "bytes": corr["bytes"],
+            "coll": corr.get("coll", 0.0), "detail": corr["detail"],
+        }
+        record.update(
+            status="ok",
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            memory_analysis={
+                "argument_size_in_bytes": ma.argument_size_in_bytes,
+                "output_size_in_bytes": ma.output_size_in_bytes,
+                "temp_size_in_bytes": ma.temp_size_in_bytes,
+                "alias_size_in_bytes": ma.alias_size_in_bytes,
+            },
+            roofline=report.to_dict(),
+        )
+        print(
+            f"[ok] {arch} {shape_name} {mesh_kind}: "
+            f"t_comp={report.t_compute:.4g}s t_mem={report.t_memory:.4g}s "
+            f"t_coll={report.t_collective:.4g}s bound={report.bottleneck} "
+            f"mem/dev={record['memory_analysis']['argument_size_in_bytes']/2**30:.2f}+"
+            f"{record['memory_analysis']['temp_size_in_bytes']/2**30:.2f} GiB "
+            f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)",
+            flush=True,
+        )
+    except Exception as e:  # a failing cell is a bug in the system
+        record["status"] = "error"
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[ERROR] {arch} {shape_name} {mesh_kind}: {e}", flush=True)
+    _write(record, results_dir)
+    return record
+
+
+def _write(record: Dict[str, Any], results_dir: str) -> None:
+    os.makedirs(results_dir, exist_ok=True)
+    name = f"{record['arch']}__{record['shape']}__{record['mesh']}.json"
+    with open(os.path.join(results_dir, name), "w") as f:
+        json.dump(record, f, indent=1, default=str)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(shape_mod.SHAPES))
+    ap.add_argument("--mesh", default="single", choices=["single", "multipod"])
+    ap.add_argument("--all", action="store_true",
+                    help="sweep every (arch, shape) on both meshes")
+    ap.add_argument("--results", default=RESULTS_DIR)
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--attn-impl", default="xla",
+                    choices=["xla", "xla_flash"])
+    ap.add_argument("--mlstm-chunk", type=int, default=None)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--moe-combine", default="gather",
+                    choices=["gather", "scatter"])
+    ap.add_argument("--moe-cap-factor", type=float, default=None)
+    ap.add_argument("--bf16-reduce", action="store_true")
+    ap.add_argument("--dp-only", action="store_true",
+                    help="map the model axis as extra DP (small models): "
+                         "replicated params, batch over every mesh axis")
+    ap.add_argument("--variant", default="baseline")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in configs.ARCH_IDS:
+            for shape in shape_mod.SHAPES:
+                for mesh_kind in ("single", "multipod"):
+                    cells.append((arch, shape, mesh_kind))
+    else:
+        if not args.arch:
+            ap.error("--arch required unless --all")
+        shapes_ = [args.shape] if args.shape else list(shape_mod.SHAPES)
+        cells = [(args.arch, s, args.mesh) for s in shapes_]
+
+    from ..models import moe as _moe, layers as _layers
+    _moe.COMBINE_MODE = args.moe_combine
+    _layers.REDUCE_IN_COMPUTE_DTYPE = args.bf16_reduce
+    global _CAP_FACTOR_OVERRIDE
+    _CAP_FACTOR_OVERRIDE = args.moe_cap_factor
+
+    n_ok = n_skip = n_err = 0
+    for arch, shape, mesh_kind in cells:
+        out = os.path.join(
+            args.results, f"{arch}__{shape}__{mesh_kind}.json"
+        )
+        if args.skip_existing and os.path.exists(out):
+            with open(out) as f:
+                prev = json.load(f)
+            if prev.get("status") in ("ok", "skipped"):
+                continue
+        rec = run_cell(
+            arch, shape, mesh_kind, results_dir=args.results,
+            attn_impl=args.attn_impl, mlstm_chunk=args.mlstm_chunk,
+            grad_accum=args.grad_accum, dp_only=args.dp_only,
+            variant=args.variant,
+        )
+        st = rec["status"]
+        n_ok += st == "ok"
+        n_skip += st == "skipped"
+        n_err += st == "error"
+    print(f"done: {n_ok} ok, {n_skip} skipped, {n_err} errors", flush=True)
+
+
+if __name__ == "__main__":
+    main()

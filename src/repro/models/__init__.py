@@ -1,0 +1,10 @@
+"""Assigned-architecture model zoo (pure JAX, scan-over-layers)."""
+from . import api, config, hybrid, layers, moe, ssm, transformer
+from .api import Model, build_model
+from .config import MambaConfig, ModelConfig, MoEConfig, XLSTMConfig
+
+__all__ = [
+    "api", "config", "hybrid", "layers", "moe", "ssm", "transformer",
+    "Model", "build_model", "MambaConfig", "ModelConfig", "MoEConfig",
+    "XLSTMConfig",
+]

@@ -1,0 +1,153 @@
+"""Unified model facade: build_model(cfg) -> Model with init / forward /
+prefill / decode, dispatching on the architecture family.
+
+The facade is what the launchers, dry-run driver, and tests consume; each
+family keeps its own module underneath (transformer / moe / ssm / hybrid).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import hybrid, transformer
+from .config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    init: Callable[[jax.Array], Params]
+    #: forward(params, batch) -> logits ; batch is a dict of arrays
+    forward: Callable[..., jax.Array]
+    init_cache: Optional[Callable[..., Any]] = None
+    prefill: Optional[Callable[..., Tuple[jax.Array, Any]]] = None
+    decode_step: Optional[Callable[..., Tuple[jax.Array, Any]]] = None
+
+    @property
+    def arch_id(self) -> str:
+        return self.cfg.arch_id
+
+
+def build_model(cfg: ModelConfig, *, attn_impl: str = "auto") -> Model:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        def fwd(params, batch, moe_capacity=None):
+            return transformer.decoder_forward(
+                params, batch["tokens"], cfg, attn_impl=attn_impl,
+                moe_capacity=moe_capacity,
+            )
+
+        def prefill(params, batch, cache, moe_capacity=None):
+            return transformer.decoder_prefill(
+                params, batch["tokens"], cache, cfg,
+                moe_capacity=moe_capacity,
+            )
+
+        def decode(params, token, cache, cache_index, moe_capacity=None):
+            return transformer.decoder_decode_step(
+                params, token, cache, cache_index, cfg,
+                moe_capacity=moe_capacity,
+            )
+
+        return Model(
+            cfg=cfg,
+            init=lambda key: transformer.decoder_init(cfg, key),
+            forward=fwd,
+            init_cache=lambda batch, max_len: transformer.decoder_init_cache(
+                cfg, batch, max_len
+            ),
+            prefill=prefill,
+            decode_step=decode,
+        )
+
+    if fam == "hybrid_jamba":
+        def fwd(params, batch, moe_capacity=None):
+            return hybrid.hybrid_forward(
+                params, batch["tokens"], cfg, attn_impl=attn_impl,
+                moe_capacity=moe_capacity,
+            )
+
+        def prefill(params, batch, cache, moe_capacity=None):
+            return hybrid.hybrid_prefill(
+                params, batch["tokens"], cache, cfg,
+                moe_capacity=moe_capacity,
+            )
+
+        def decode(params, token, cache, cache_index, moe_capacity=None):
+            return hybrid.hybrid_decode_step(
+                params, token, cache, cache_index, cfg,
+                moe_capacity=moe_capacity,
+            )
+
+        return Model(
+            cfg=cfg,
+            init=lambda key: hybrid.hybrid_init(cfg, key),
+            forward=fwd,
+            init_cache=lambda batch, max_len: hybrid.hybrid_init_cache(
+                cfg, batch, max_len
+            ),
+            prefill=prefill,
+            decode_step=decode,
+        )
+
+    if fam == "ssm_xlstm":
+        def fwd(params, batch, moe_capacity=None):
+            return transformer.xlstm_forward(params, batch["tokens"], cfg)
+
+        def prefill(params, batch, cache, moe_capacity=None):
+            logits, states = transformer.xlstm_forward(
+                params, batch["tokens"], cfg, states=cache
+            )
+            return logits[:, -1], states
+
+        def decode(params, token, cache, cache_index, moe_capacity=None):
+            logits, states = transformer.xlstm_forward(
+                params, token[:, None], cfg, states=cache
+            )
+            return logits[:, -1], states
+
+        return Model(
+            cfg=cfg,
+            init=lambda key: transformer.xlstm_init(cfg, key),
+            forward=fwd,
+            init_cache=lambda batch, max_len: transformer.xlstm_init_states(
+                cfg, batch
+            ),
+            prefill=prefill,
+            decode_step=decode,
+        )
+
+    if fam == "encdec":
+        def fwd(params, batch, moe_capacity=None):
+            return transformer.encdec_forward(
+                params, batch["frames"], batch["tokens"], cfg,
+                attn_impl=attn_impl,
+            )
+
+        def prefill(params, batch, cache, moe_capacity=None):
+            return transformer.encdec_prefill(
+                params, batch["frames"], batch["tokens"], cache, cfg,
+            )
+
+        def decode(params, token, cache, cache_index, moe_capacity=None):
+            return transformer.encdec_decode_step(
+                params, token, cache, cache_index, cfg
+            )
+
+        return Model(
+            cfg=cfg,
+            init=lambda key: transformer.encdec_init(cfg, key),
+            forward=fwd,
+            init_cache=lambda batch, max_len: transformer.encdec_init_cache(
+                cfg, batch, max_len
+            ),
+            prefill=prefill,
+            decode_step=decode,
+        )
+
+    raise ValueError(f"unknown family {fam!r}")

@@ -1,0 +1,191 @@
+"""Jamba-style hybrid: Mamba+attention 1:7 interleave with MoE FFNs.
+
+Structure (period of ``attn_period`` layers, scanned over periods for a
+compact HLO):
+
+  layer i in period:  mixer = attention  if i == attn_period-1 else mamba
+                      ffn   = MoE        if i odd else dense MLP
+
+For jamba-1.5-large: 72 layers = 9 periods of 8; one attention layer per
+period (1:7), MoE on every other layer -- matching the published layout.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers, moe as moe_mod, ssm
+from .config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+def _sub_init(key, cfg: ModelConfig, idx_in_period: int, dtype) -> Params:
+    k1, k2 = jax.random.split(key)
+    is_attn = idx_in_period == cfg.attn_period - 1
+    p: Params = {"ln1": layers.norm_init(cfg.d_model, cfg.norm, dtype),
+                 "ln2": layers.norm_init(cfg.d_model, cfg.norm, dtype)}
+    if is_attn:
+        p["attn"] = layers.attention_init(k1, cfg, dtype)
+    else:
+        p["mamba"] = ssm.mamba_init(k1, cfg, dtype)
+    if idx_in_period % 2 == 1:
+        p["moe"] = moe_mod.moe_init(k2, cfg, dtype)
+    else:
+        p["mlp"] = layers.mlp_init(k2, cfg, dtype)
+    return p
+
+
+def hybrid_init(cfg: ModelConfig, key) -> Params:
+    dtype = jnp.dtype(cfg.param_dtype)
+    n_periods = cfg.n_layers // cfg.attn_period
+    k_emb, k_per = jax.random.split(key)
+
+    def period_init(k):
+        ks = jax.random.split(k, cfg.attn_period)
+        return {
+            f"sub{i}": _sub_init(ks[i], cfg, i, dtype)
+            for i in range(cfg.attn_period)
+        }
+
+    period_keys = jax.random.split(k_per, n_periods)
+    periods = jax.vmap(period_init)(period_keys)
+    return {
+        "embed": layers.embed_init(k_emb, cfg, dtype),
+        "periods": periods,
+        "ln_f": layers.norm_init(cfg.d_model, cfg.norm, dtype),
+    }
+
+
+def _period_apply(pp, x, cfg, *, positions, attn_impl, moe_capacity,
+                  cache=None, cache_index=None):
+    """Apply one period (attn_period sub-layers).  cache: dict with
+    'k'/'v' (attention) and 'conv'/'ssm' stacked over the mamba slots."""
+    new_kv = None
+    new_mamba = {"conv": [], "ssm": []} if cache is not None else None
+    mamba_slot = 0
+    for i in range(cfg.attn_period):
+        sp = pp[f"sub{i}"]
+        h = layers.norm_apply(sp["ln1"], x, cfg.norm, cfg.norm_eps)
+        if "attn" in sp:
+            c = None
+            if cache is not None:
+                c = {"k": cache["k"], "v": cache["v"]}
+            a, nc = layers.attention_apply(
+                sp["attn"], h, cfg, positions=positions, cache=c,
+                cache_index=cache_index, causal=True, attn_impl=attn_impl,
+            )
+            if cache is not None:
+                new_kv = nc
+        else:
+            st = None
+            if cache is not None:
+                st = {
+                    "conv": cache["conv"][mamba_slot],
+                    "ssm": cache["ssm"][mamba_slot],
+                }
+            a, nst = ssm.mamba_apply(sp["mamba"], h, cfg, state=st)
+            if cache is not None:
+                new_mamba["conv"].append(nst["conv"])
+                new_mamba["ssm"].append(nst["ssm"])
+                mamba_slot += 1
+        x = x + a
+        h = layers.norm_apply(sp["ln2"], x, cfg.norm, cfg.norm_eps)
+        if "moe" in sp:
+            f = moe_mod.moe_apply(sp["moe"], h, cfg, capacity=moe_capacity)
+        else:
+            f = layers.mlp_apply(sp["mlp"], h, cfg)
+        x = x + f
+    if cache is None:
+        return x, None
+    new_cache = {
+        "k": new_kv["k"], "v": new_kv["v"],
+        "conv": jnp.stack(new_mamba["conv"]),
+        "ssm": jnp.stack(new_mamba["ssm"]),
+    }
+    return x, new_cache
+
+
+def hybrid_forward(
+    params: Params,
+    tokens: jax.Array,
+    cfg: ModelConfig,
+    *,
+    attn_impl: str = "auto",
+    moe_capacity: Optional[int] = None,
+) -> jax.Array:
+    B, T = tokens.shape
+    x = layers.embed_apply(params["embed"], tokens, cfg)
+    positions = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+
+    def body(h, pp):
+        h, _ = _period_apply(
+            pp, h, cfg, positions=positions, attn_impl=attn_impl,
+            moe_capacity=moe_capacity,
+        )
+        return h, None
+
+    if cfg.remat == "block":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["periods"])
+    x = layers.norm_apply(params["ln_f"], x, cfg.norm, cfg.norm_eps)
+    return layers.unembed_apply(params["embed"], None, x, cfg)
+
+
+def hybrid_init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    n_periods = cfg.n_layers // cfg.attn_period
+    n_mamba = cfg.attn_period - 1
+    m = cfg.mamba
+    d_in = m.expand * cfg.d_model
+    dt = jnp.dtype(cfg.compute_dtype)
+    return {
+        "k": jnp.zeros((n_periods, batch, max_len, cfg.n_kv_heads, cfg.hd), dt),
+        "v": jnp.zeros((n_periods, batch, max_len, cfg.n_kv_heads, cfg.hd), dt),
+        "conv": jnp.zeros((n_periods, n_mamba, batch, m.d_conv - 1, d_in), dt),
+        "ssm": jnp.zeros((n_periods, n_mamba, batch, d_in, m.d_state),
+                         jnp.float32),
+    }
+
+
+def _cached_apply(params, x, positions, cache, cache_index, cfg,
+                  moe_capacity=None):
+    def body(h, xs):
+        pp, c = xs
+        h, nc = _period_apply(
+            pp, h, cfg, positions=positions, attn_impl="xla",
+            moe_capacity=moe_capacity, cache=c, cache_index=cache_index,
+        )
+        return h, nc
+
+    x, new_cache = jax.lax.scan(body, x, (params["periods"], cache))
+    return x, new_cache
+
+
+def hybrid_prefill(params, tokens, cache, cfg, *, moe_capacity=None):
+    B, T = tokens.shape
+    x = layers.embed_apply(params["embed"], tokens, cfg)
+    positions = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+    x, new_cache = _cached_apply(
+        params, x, positions, cache, jnp.int32(0), cfg,
+        moe_capacity=moe_capacity,
+    )
+    x = layers.norm_apply(params["ln_f"], x, cfg.norm, cfg.norm_eps)
+    logits = layers.unembed_apply(params["embed"], None, x[:, -1:], cfg)
+    return logits[:, 0], new_cache
+
+
+def hybrid_decode_step(params, token, cache, cache_index, cfg,
+                       *, moe_capacity=None):
+    B = token.shape[0]
+    x = layers.embed_apply(params["embed"], token[:, None], cfg)
+    positions = jnp.broadcast_to(cache_index[None, None], (B, 1))
+    x, new_cache = _cached_apply(
+        params, x, positions, cache, cache_index, cfg,
+        moe_capacity=moe_capacity,
+    )
+    x = layers.norm_apply(params["ln_f"], x, cfg.norm, cfg.norm_eps)
+    logits = layers.unembed_apply(params["embed"], None, x, cfg)
+    return logits[:, 0], new_cache

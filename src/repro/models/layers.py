@@ -1,0 +1,311 @@
+"""Shared neural-net layers (pure functional JAX, dict params).
+
+Conventions:
+  * params are nested dicts of jnp arrays; leaves use cfg.param_dtype.
+  * activations use cfg.compute_dtype with f32 accumulation on matmuls
+    (the precision-policy split from core.precision applied to LM archs).
+  * every init_* function returns (params); every apply is pure.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.attention import ops as attn_ops
+from .config import ModelConfig
+
+Params = Dict[str, Any]
+
+#: When True, matmul partial sums are produced in the compute dtype so
+#: cross-shard (TP) all-reduces move bf16 instead of f32 -- halves the
+#: activation-collective bytes at the cost of one extra rounding per
+#: 16-way reduction.  Set by the dry-run/launchers (--bf16-reduce).
+REDUCE_IN_COMPUTE_DTYPE = False
+
+
+# -- initializers -----------------------------------------------------------
+
+def _normal(key, shape, dtype, scale):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, *, bias: bool = False,
+               scale: Optional[float] = None) -> Params:
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    p = {"w": _normal(key, (d_in, d_out), dtype, scale)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense_apply(p: Params, x: jax.Array, compute_dtype) -> jax.Array:
+    acc = (
+        jnp.dtype(compute_dtype) if REDUCE_IN_COMPUTE_DTYPE
+        else jnp.float32
+    )
+    y = jnp.einsum(
+        "...i,io->...o", x.astype(compute_dtype), p["w"].astype(compute_dtype),
+        preferred_element_type=acc,
+    )
+    if "b" in p:
+        y = y + p["b"].astype(acc)
+    return y.astype(compute_dtype)
+
+
+# -- norms --------------------------------------------------------------------
+
+def norm_init(d: int, kind: str, dtype) -> Params:
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def norm_apply(p: Params, x: jax.Array, kind: str, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# -- rotary embeddings --------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., T, d) with d even; positions: (..., T) int32."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(
+        -math.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half
+    )
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., T, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# -- attention ----------------------------------------------------------------
+
+def attention_init(key, cfg: ModelConfig, dtype) -> Params:
+    d, hd, Hq, Hkv = cfg.d_model, cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, Hq * hd, dtype, bias=cfg.qkv_bias),
+        "wk": dense_init(ks[1], d, Hkv * hd, dtype, bias=cfg.qkv_bias),
+        "wv": dense_init(ks[2], d, Hkv * hd, dtype, bias=cfg.qkv_bias),
+        "wo": dense_init(ks[3], Hq * hd, d, dtype,
+                         scale=1.0 / math.sqrt(Hq * hd * 2 * cfg.n_layers)),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = norm_init(hd, "rmsnorm", dtype)
+        p["k_norm"] = norm_init(hd, "rmsnorm", dtype)
+    return p
+
+
+def attention_apply(
+    p: Params,
+    x: jax.Array,                     # (B, T, d)
+    cfg: ModelConfig,
+    *,
+    positions: jax.Array,             # (B, T)
+    kv: Optional[Tuple[jax.Array, jax.Array]] = None,   # cross-attn K/V src
+    cache: Optional[Dict[str, jax.Array]] = None,       # decode KV cache
+    cache_index: Optional[jax.Array] = None,
+    causal: bool = True,
+    attn_impl: str = "auto",
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    B, T, d = x.shape
+    hd, Hq, Hkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    cd = jnp.dtype(cfg.compute_dtype)
+
+    q = dense_apply(p["wq"], x, cd).reshape(B, T, Hq, hd)
+    if kv is None:
+        k = dense_apply(p["wk"], x, cd).reshape(B, T, Hkv, hd)
+        v = dense_apply(p["wv"], x, cd).reshape(B, T, Hkv, hd)
+    else:
+        src_k, src_v = kv
+        Ts = src_k.shape[1]
+        k = dense_apply(p["wk"], src_k, cd).reshape(B, Ts, Hkv, hd)
+        v = dense_apply(p["wv"], src_v, cd).reshape(B, Ts, Hkv, hd)
+
+    if cfg.qk_norm:
+        q = norm_apply(p["q_norm"], q, "rmsnorm", cfg.norm_eps)
+        k = norm_apply(p["k_norm"], k, "rmsnorm", cfg.norm_eps)
+
+    if kv is None and cfg.rope_theta > 0:
+        q = rope(q.swapaxes(1, 2), positions[:, None], cfg.rope_theta).swapaxes(1, 2)
+        kpos = positions
+        k = rope(k.swapaxes(1, 2), kpos[:, None], cfg.rope_theta).swapaxes(1, 2)
+
+    new_cache = None
+    per_slot = (
+        cache_index is not None
+        and isinstance(cache_index, jax.Array)
+        and cache_index.ndim == 1
+    )
+    if cache is not None:
+        # write the new K/V at cache_index (decode: T == 1; prefill: T == n)
+        idx = cache_index if cache_index is not None else 0
+        if per_slot:
+            # continuous batching: every sequence decodes at its own
+            # position (T must be 1)
+            bidx = jnp.arange(B)
+            ck = cache["k"].at[bidx, idx].set(k[:, 0].astype(cache["k"].dtype))
+            cv = cache["v"].at[bidx, idx].set(v[:, 0].astype(cache["v"].dtype))
+        else:
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, idx, 0, 0)
+            )
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, idx, 0, 0)
+            )
+        new_cache = {"k": ck, "v": cv}
+        k, v = ck, cv
+        Tk = k.shape[1]
+        # mask out unwritten cache slots via additive bias in xla impl
+        if per_slot:
+            valid = jnp.arange(Tk)[None, :] <= idx[:, None]  # (B, Tk)
+        else:
+            valid = jnp.arange(Tk)[None, :] <= (idx + T - 1)
+    else:
+        Tk = k.shape[1]
+        valid = None
+
+    qh = q.swapaxes(1, 2)  # (B, Hq, T, hd)
+    kh = k.swapaxes(1, 2)  # (B, Hkv, Tk, hd)
+    vh = v.swapaxes(1, 2)
+
+    if cache is not None or kv is not None:
+        # decode / cross path: plain XLA attention with validity mask.
+        # per-slot decode: the validity mask subsumes causality (query sits
+        # at its own cache position).
+        o = _masked_attention(qh, kh, vh,
+                              causal=causal and kv is None and not per_slot,
+                              valid=valid, q_offset=(0 if kv is not None else None),
+                              cache_index=cache_index, t=T)
+    else:
+        o = attn_ops.multi_head_attention(
+            qh, kh, vh, causal=causal, impl=attn_impl
+        )
+    o = o.swapaxes(1, 2).reshape(B, T, Hq * hd)
+    out = dense_apply(p["wo"], o, cd)
+    return out, new_cache
+
+
+def _masked_attention(q, k, v, *, causal: bool, valid, q_offset,
+                      cache_index, t: int):
+    """GQA attention with an explicit validity/causal mask (cache path).
+
+    Sharding note: with the KV cache sharded along its sequence axis the
+    reductions below lower to partial reduce + all-reduce, i.e. the
+    flash-decoding combine falls out of GSPMD (DESIGN.md section 5).
+    """
+    B, Hq, T, hd = q.shape
+    _, Hkv, Tk, _ = k.shape
+    group = Hq // Hkv
+    qg = q.reshape(B, Hkv, group, T, hd)
+    s = jnp.einsum(
+        "bhgqd,bhkd->bhgqk", qg.astype(jnp.float32), k.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ) / math.sqrt(hd)
+    mask = None
+    if causal:
+        qpos = (cache_index if cache_index is not None else 0) + jnp.arange(T)
+        kpos = jnp.arange(Tk)
+        mask = qpos[:, None] >= kpos[None, :]
+    if valid is not None:
+        vmask = jnp.broadcast_to(valid[:, None, :], (B, T, Tk))
+        mask = vmask if mask is None else (mask[None] & vmask)
+    if mask is not None:
+        if mask.ndim == 2:
+            mask = mask[None, None, None]
+        else:  # (B, T, Tk)
+            mask = mask[:, None, None]
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum(
+        "bhgqk,bhkd->bhgqd", p.astype(v.dtype), v,
+        preferred_element_type=jnp.float32,
+    )
+    return o.reshape(B, Hq, T, hd).astype(q.dtype)
+
+
+# -- MLP -----------------------------------------------------------------------
+
+def mlp_init(key, cfg: ModelConfig, dtype, d_ff: Optional[int] = None) -> Params:
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.act == "swiglu":
+        return {
+            "gate": dense_init(ks[0], d, ff, dtype, bias=cfg.mlp_bias),
+            "up": dense_init(ks[1], d, ff, dtype, bias=cfg.mlp_bias),
+            "down": dense_init(ks[2], ff, d, dtype, bias=cfg.mlp_bias,
+                               scale=1.0 / math.sqrt(ff * 2 * cfg.n_layers)),
+        }
+    return {
+        "up": dense_init(ks[0], d, ff, dtype, bias=cfg.mlp_bias),
+        "down": dense_init(ks[1], ff, d, dtype, bias=cfg.mlp_bias,
+                           scale=1.0 / math.sqrt(ff * 2 * cfg.n_layers)),
+    }
+
+
+def mlp_apply(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    cd = jnp.dtype(cfg.compute_dtype)
+    if cfg.act == "swiglu":
+        g = dense_apply(p["gate"], x, cd)
+        u = dense_apply(p["up"], x, cd)
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(cd) * u
+    else:
+        u = dense_apply(p["up"], x, cd)
+        h = jax.nn.gelu(u.astype(jnp.float32)).astype(cd)
+    return dense_apply(p["down"], h, cd)
+
+
+# -- embeddings -----------------------------------------------------------------
+
+def embed_init(key, cfg: ModelConfig, dtype) -> Params:
+    p = {"tok": _normal(key, (cfg.vocab, cfg.d_model), dtype, 1.0)}
+    return p
+
+
+def embed_apply(p: Params, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    return p["tok"].astype(cfg.compute_dtype)[tokens]
+
+
+def unembed_apply(p_embed: Params, p_head: Optional[Params], x: jax.Array,
+                  cfg: ModelConfig) -> jax.Array:
+    cd = jnp.dtype(cfg.compute_dtype)
+    w = (p_embed["tok"] if p_head is None else p_head["w"])
+    if p_head is None:
+        logits = jnp.einsum(
+            "...d,vd->...v", x.astype(cd), w.astype(cd),
+            preferred_element_type=jnp.float32,
+        )
+    else:
+        logits = jnp.einsum(
+            "...d,dv->...v", x.astype(cd), w.astype(cd),
+            preferred_element_type=jnp.float32,
+        )
+    return logits
+
+
+def sinusoidal_positions(n: int, d: int) -> jax.Array:
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, dim / d)
+    pe = jnp.zeros((n, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(ang))
+    pe = pe.at[:, 1::2].set(jnp.cos(ang))
+    return pe

@@ -1,0 +1,399 @@
+"""State-space / recurrent blocks: Mamba (S6, for Jamba) and xLSTM
+(sLSTM + mLSTM).
+
+Recurrences are data-dependent over time, outside the tensor-expression
+(teil) semantics, so these are native JAX with `lax.scan` (compact HLO --
+important for the 512-device dry-run).  Decode is O(1): the "cache" is
+the fixed-size recurrent state, which is what makes the `long_500k` shape
+runnable for these families (DESIGN.md shape-skip notes).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from . import layers
+
+Params = Dict[str, Any]
+
+
+# =============================================================================
+# Mamba (S6) -- used by the Jamba hybrid
+# =============================================================================
+
+def mamba_init(key, cfg: ModelConfig, dtype) -> Params:
+    m = cfg.mamba
+    d = cfg.d_model
+    d_in = m.expand * d
+    dtr = m.dt_rank or -(-d // 16)
+    ks = jax.random.split(key, 7)
+    s = 1.0 / math.sqrt(d)
+    p = {
+        "in_proj": layers.dense_init(ks[0], d, 2 * d_in, dtype),
+        "conv_w": (jax.random.normal(ks[1], (m.d_conv, d_in), jnp.float32)
+                   * (1.0 / math.sqrt(m.d_conv))).astype(dtype),
+        "conv_b": jnp.zeros((d_in,), dtype),
+        "x_proj": layers.dense_init(ks[2], d_in, dtr + 2 * m.d_state, dtype),
+        "dt_proj": layers.dense_init(ks[3], dtr, d_in, dtype, bias=True),
+        "A_log": jnp.log(
+            jnp.broadcast_to(
+                jnp.arange(1, m.d_state + 1, dtype=jnp.float32)[None, :],
+                (d_in, m.d_state),
+            )
+        ).astype(jnp.float32),
+        "D": jnp.ones((d_in,), jnp.float32),
+        "out_proj": layers.dense_init(ks[4], d_in, d, dtype,
+                                      scale=1.0 / math.sqrt(d_in * 2 * cfg.n_layers)),
+    }
+    return p
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None):
+    """Depthwise causal conv1d.  x: (B, T, C), w: (K, C).
+
+    Returns (y, new_state) where state is the last K-1 inputs."""
+    B, T, C = x.shape
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((B, K - 1, C), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)         # (B, T+K-1, C)
+    y = jnp.zeros((B, T, C), jnp.float32)
+    for i in range(K):
+        y = y + xp[:, i:i + T, :].astype(jnp.float32) * w[i].astype(jnp.float32)
+    y = y + b.astype(jnp.float32)
+    new_state = xp[:, T:, :] if K > 1 else jnp.zeros((B, 0, C), x.dtype)
+    return y.astype(x.dtype), new_state
+
+
+def mamba_apply(
+    p: Params,
+    x: jax.Array,                     # (B, T, d)
+    cfg: ModelConfig,
+    *,
+    state: Optional[Dict[str, jax.Array]] = None,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    m = cfg.mamba
+    B, T, d = x.shape
+    d_in = m.expand * d
+    dtr = m.dt_rank or -(-d // 16)
+    cd = jnp.dtype(cfg.compute_dtype)
+
+    xz = layers.dense_apply(p["in_proj"], x, cd)
+    xs, z = jnp.split(xz, 2, axis=-1)              # (B, T, d_in) each
+
+    conv_state = state["conv"] if state is not None else None
+    xs, new_conv = _causal_conv(xs, p["conv_w"], p["conv_b"], conv_state)
+    xs = jax.nn.silu(xs.astype(jnp.float32)).astype(cd)
+
+    dbc = layers.dense_apply(p["x_proj"], xs, cd)
+    dt, Bc, Cc = jnp.split(dbc, [dtr, dtr + m.d_state], axis=-1)
+    dt = layers.dense_apply(p["dt_proj"], dt, cd)  # (B, T, d_in)
+    dt = jax.nn.softplus(dt.astype(jnp.float32))   # (B, T, d_in)
+    A = -jnp.exp(p["A_log"])                        # (d_in, S)
+
+    h0 = (state["ssm"] if state is not None
+          else jnp.zeros((B, d_in, m.d_state), jnp.float32))
+
+    # selective scan: h_t = exp(dt*A) h_{t-1} + dt * B_t * x_t.
+    # dA/dBx are formed PER STEP inside the scan (never materializing the
+    # (B, T, d_in, S) tensor -- at jamba's train_4k shape that would be
+    # ~1 TB global), and y_t = C_t . h_t is contracted inside the step so
+    # only (B, T, d_in) activations cross the scan boundary.
+    def step(h, inputs):
+        dt_t, b_t, c_t, x_t = inputs      # (B,d_in),(B,S),(B,S),(B,d_in)
+        dA_t = jnp.exp(dt_t[..., None] * A[None])            # (B,d_in,S)
+        dBx_t = (dt_t * x_t)[..., None] * b_t[:, None, :]
+        h = dA_t * h + dBx_t
+        y_t = jnp.einsum("bds,bs->bd", h, c_t)
+        return h, y_t
+
+    xs_f32 = xs.astype(jnp.float32)
+    hT, ys = jax.lax.scan(
+        step, h0,
+        (
+            jnp.moveaxis(dt, 1, 0),
+            jnp.moveaxis(Bc.astype(jnp.float32), 1, 0),
+            jnp.moveaxis(Cc.astype(jnp.float32), 1, 0),
+            jnp.moveaxis(xs_f32, 1, 0),
+        ),
+    )                                                # ys: (T, B, d_in)
+    y = jnp.moveaxis(ys, 0, 1)
+    y = y + p["D"].astype(jnp.float32) * xs_f32
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = layers.dense_apply(p["out_proj"], y.astype(cd), cd)
+    new_state = {"conv": new_conv, "ssm": hT} if state is not None else None
+    return out.astype(x.dtype), new_state
+
+
+def mamba_init_state(cfg: ModelConfig, batch: int) -> Dict[str, jax.Array]:
+    m = cfg.mamba
+    d_in = m.expand * cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, m.d_conv - 1, d_in), jnp.dtype(cfg.compute_dtype)),
+        "ssm": jnp.zeros((batch, d_in, m.d_state), jnp.float32),
+    }
+
+
+# =============================================================================
+# xLSTM: mLSTM (matrix memory) + sLSTM (scalar memory)
+# =============================================================================
+
+#: Chunkwise-parallel mLSTM switch (None = exact recurrent scan).  Set by
+#: the dry-run/launchers for the optimized path: the matrix memory C is
+#: then read/written once per chunk instead of once per step, cutting
+#: state HBM traffic by the chunk width (the dominant memory-roofline
+#: term for xlstm-125m train_4k -- see EXPERIMENTS.md section Perf).
+MLSTM_CHUNK = None
+
+
+def mlstm_init(key, cfg: ModelConfig, dtype) -> Params:
+    d, hd, H = cfg.d_model, cfg.hd, cfg.n_heads
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": layers.dense_init(ks[0], d, H * hd, dtype),
+        "wk": layers.dense_init(ks[1], d, H * hd, dtype),
+        "wv": layers.dense_init(ks[2], d, H * hd, dtype),
+        "wi": layers.dense_init(ks[3], d, H, dtype, bias=True),
+        "wf": layers.dense_init(ks[4], d, H, dtype, bias=True),
+        "wo": layers.dense_init(ks[5], H * hd, d, dtype,
+                                scale=1.0 / math.sqrt(H * hd * 2 * cfg.n_layers)),
+    }
+
+
+def mlstm_apply(
+    p: Params,
+    x: jax.Array,                 # (B, T, d)
+    cfg: ModelConfig,
+    *,
+    state: Optional[Dict[str, jax.Array]] = None,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    B, T, d = x.shape
+    hd, H = cfg.hd, cfg.n_heads
+    cd = jnp.dtype(cfg.compute_dtype)
+    q = layers.dense_apply(p["wq"], x, cd).reshape(B, T, H, hd)
+    k = layers.dense_apply(p["wk"], x, cd).reshape(B, T, H, hd) / math.sqrt(hd)
+    v = layers.dense_apply(p["wv"], x, cd).reshape(B, T, H, hd)
+    i_pre = layers.dense_apply(p["wi"], x, jnp.float32)  # (B, T, H)
+    f_pre = layers.dense_apply(p["wf"], x, jnp.float32)
+
+    if state is None:
+        C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+        n0 = jnp.zeros((B, H, hd), jnp.float32)
+        m0 = jnp.zeros((B, H), jnp.float32)
+    else:
+        C0, n0, m0 = state["C"], state["n"], state["m"]
+
+    def step(carry, inputs):
+        C, n, m = carry
+        qt, kt, vt, it, ft = inputs  # (B,H,hd)x3, (B,H)x2
+        m_new = jnp.maximum(ft + m, it)               # stabilizer
+        i_g = jnp.exp(it - m_new)
+        f_g = jnp.exp(ft + m - m_new)
+        C = f_g[..., None, None] * C + i_g[..., None, None] * (
+            kt[..., :, None] * vt[..., None, :]
+        )
+        n = f_g[..., None] * n + i_g[..., None] * kt
+        num = jnp.einsum("bhkv,bhk->bhv", C, qt.astype(jnp.float32))
+        den = jnp.abs(jnp.einsum("bhk,bhk->bh", n, qt.astype(jnp.float32)))
+        h = num / jnp.maximum(den, 1.0)[..., None]
+        return (C, n, m_new), h
+
+    # reorder to (T, B, H, hd)
+    qs = jnp.moveaxis(q.astype(jnp.float32), 1, 0)
+    ks_ = jnp.moveaxis(k.astype(jnp.float32), 1, 0)
+    vs = jnp.moveaxis(v.astype(jnp.float32), 1, 0)
+    is_ = jnp.moveaxis(i_pre, 1, 0)
+    fs = jnp.moveaxis(jax.nn.log_sigmoid(f_pre), 1, 0)
+
+    (CT, nT, mT), hs = jax.lax.scan(step, (C0, n0, m0), (qs, ks_, vs, is_, fs))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, T, H * hd)   # (B, T, H*hd)
+    out = layers.dense_apply(p["wo"], h.astype(cd), cd)
+    new_state = ({"C": CT, "n": nT, "m": mT} if state is not None else None)
+    return out.astype(x.dtype), new_state
+
+
+def _mlstm_chunk_body(q, k, v, i_pre, f_log, C, n, m, *, W: int):
+    """One chunk of the chunkwise-parallel stabilized mLSTM.
+
+    q/k/v: (B, H, W, hd) f32; i_pre/f_log: (B, H, W); carry (C, n, m).
+    Exactly equivalent to W recurrent steps (same stabilizer convention:
+    the carried C/n are scaled by exp(-m)).
+    """
+    F = jnp.cumsum(f_log, axis=-1)                      # (B,H,W)
+    a = i_pre - F
+    M = jnp.maximum(
+        m[..., None], jax.lax.cummax(a, axis=a.ndim - 1)
+    )                                                    # (B,H,W)
+    # intra-chunk scores with per-(t,s) decay, causal within the chunk
+    S = jnp.einsum("bhtd,bhsd->bhts", q, k,
+                   preferred_element_type=jnp.float32)
+    decay = jnp.exp(a[..., None, :] - M[..., :, None])   # (B,H,t,s)
+    tri = jnp.tril(jnp.ones((W, W), bool))
+    St = jnp.where(tri[None, None], S * decay, 0.0)
+    num = jnp.einsum("bhts,bhsv->bhtv", St, v,
+                     preferred_element_type=jnp.float32)
+    den = jnp.sum(St, axis=-1)                           # (B,H,t)
+    # inter-chunk (previous state) contribution
+    inter_w = jnp.exp(m[..., None] - M)                  # (B,H,t)
+    num = num + inter_w[..., None] * jnp.einsum(
+        "bhkv,bhtk->bhtv", C, q, preferred_element_type=jnp.float32
+    )
+    den = den + inter_w * jnp.einsum(
+        "bhk,bhtk->bht", n, q, preferred_element_type=jnp.float32
+    )
+    h = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+    # end-of-chunk state update (C/n touched ONCE per chunk)
+    M_W = M[..., -1]
+    F_W = F[..., -1]
+    w_s = jnp.exp(a - M_W[..., None])                    # (B,H,s)
+    carry_w = jnp.exp(m - M_W)
+    C_new = jnp.einsum("bhs,bhsk,bhsv->bhkv", w_s, k, v,
+                       preferred_element_type=jnp.float32) \
+        + carry_w[..., None, None] * C
+    n_new = jnp.einsum("bhs,bhsk->bhk", w_s, k,
+                       preferred_element_type=jnp.float32) \
+        + carry_w[..., None] * n
+    m_new = F_W + M_W
+    return h, (C_new, n_new, m_new)
+
+
+def mlstm_apply_chunked(
+    p: Params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    chunk: int,
+    state: Optional[Dict[str, jax.Array]] = None,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    B, T, d = x.shape
+    hd, H = cfg.hd, cfg.n_heads
+    cd = jnp.dtype(cfg.compute_dtype)
+    W = chunk
+    if T % W:
+        return mlstm_apply(p, x, cfg, state=state)  # ragged: fall back
+    q = layers.dense_apply(p["wq"], x, cd).reshape(B, T, H, hd)
+    k = layers.dense_apply(p["wk"], x, cd).reshape(B, T, H, hd) / math.sqrt(hd)
+    v = layers.dense_apply(p["wv"], x, cd).reshape(B, T, H, hd)
+    i_pre = layers.dense_apply(p["wi"], x, jnp.float32)
+    f_log = jax.nn.log_sigmoid(layers.dense_apply(p["wf"], x, jnp.float32))
+
+    def to_chunks(t):  # (B,T,H,*) -> (n, B, H, W, *)
+        t = jnp.moveaxis(t, 2, 1)                        # (B,H,T,*)
+        t = t.reshape(t.shape[:2] + (T // W, W) + t.shape[3:])
+        return jnp.moveaxis(t, 2, 0)
+
+    qs = to_chunks(q.astype(jnp.float32))
+    ks_ = to_chunks(k.astype(jnp.float32))
+    vs = to_chunks(v.astype(jnp.float32))
+    # gates: (B,T,H) -> (n_chunks, B, H, W)
+    ii = jnp.moveaxis(i_pre, 1, 2).reshape(B, H, T // W, W)
+    ii = jnp.moveaxis(ii, 2, 0)
+    ff = jnp.moveaxis(f_log, 1, 2).reshape(B, H, T // W, W)
+    ff = jnp.moveaxis(ff, 2, 0)
+
+    if state is None:
+        C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+        n0 = jnp.zeros((B, H, hd), jnp.float32)
+        m0 = jnp.zeros((B, H), jnp.float32)
+    else:
+        C0, n0, m0 = state["C"], state["n"], state["m"]
+
+    def step(carry, inp):
+        C, n, m = carry
+        qc, kc, vc, ic, fc = inp
+        h, (C, n, m) = _mlstm_chunk_body(
+            qc, kc, vc, ic, fc, C, n, m, W=W
+        )
+        return (C, n, m), h
+
+    (CT, nT, mT), hs = jax.lax.scan(step, (C0, n0, m0), (qs, ks_, vs, ii, ff))
+    # hs: (n, B, H, W, hd) -> (B, T, H*hd)
+    h = jnp.moveaxis(hs, 0, 2).reshape(B, H, T, hd)
+    h = jnp.moveaxis(h, 1, 2).reshape(B, T, H * hd)
+    out = layers.dense_apply(p["wo"], h.astype(cd), cd)
+    new_state = ({"C": CT, "n": nT, "m": mT} if state is not None else None)
+    return out.astype(x.dtype), new_state
+
+
+def slstm_init(key, cfg: ModelConfig, dtype) -> Params:
+    d, hd, H = cfg.d_model, cfg.hd, cfg.n_heads
+    ks = jax.random.split(key, 6)
+    return {
+        "wz": layers.dense_init(ks[0], d, H * hd, dtype, bias=True),
+        "wi": layers.dense_init(ks[1], d, H * hd, dtype, bias=True),
+        "wf": layers.dense_init(ks[2], d, H * hd, dtype, bias=True),
+        "wo_gate": layers.dense_init(ks[3], d, H * hd, dtype, bias=True),
+        "wo": layers.dense_init(ks[4], H * hd, d, dtype,
+                                scale=1.0 / math.sqrt(H * hd * 2 * cfg.n_layers)),
+    }
+
+
+def slstm_apply(
+    p: Params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    state: Optional[Dict[str, jax.Array]] = None,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    B, T, d = x.shape
+    hd, H = cfg.hd, cfg.n_heads
+    D = H * hd
+    cd = jnp.dtype(cfg.compute_dtype)
+    z = jnp.tanh(layers.dense_apply(p["wz"], x, jnp.float32))
+    i_pre = layers.dense_apply(p["wi"], x, jnp.float32)
+    f_pre = jax.nn.log_sigmoid(layers.dense_apply(p["wf"], x, jnp.float32))
+    o = jax.nn.sigmoid(layers.dense_apply(p["wo_gate"], x, jnp.float32))
+
+    if state is None:
+        c0 = jnp.zeros((B, D), jnp.float32)
+        n0 = jnp.zeros((B, D), jnp.float32)
+        m0 = jnp.full((B, D), -1e30, jnp.float32)
+    else:
+        c0, n0, m0 = state["c"], state["n"], state["m"]
+
+    def step(carry, inputs):
+        c, n, m = carry
+        zt, it, ft = inputs
+        m_new = jnp.maximum(ft + m, it)
+        i_g = jnp.exp(it - m_new)
+        f_g = jnp.exp(ft + m - m_new)
+        c = f_g * c + i_g * zt
+        n = f_g * n + i_g
+        h = c / jnp.maximum(n, 1.0)
+        return (c, n, m_new), h
+
+    zs = jnp.moveaxis(z, 1, 0)
+    is_ = jnp.moveaxis(i_pre, 1, 0)
+    fs = jnp.moveaxis(f_pre, 1, 0)
+    (cT, nT, mT), hs = jax.lax.scan(step, (c0, n0, m0), (zs, is_, fs))
+    h = jnp.moveaxis(hs, 0, 1) * o                   # (B, T, D)
+    out = layers.dense_apply(p["wo"], h.astype(cd), cd)
+    new_state = ({"c": cT, "n": nT, "m": mT} if state is not None else None)
+    return out.astype(x.dtype), new_state
+
+
+def xlstm_block_kind(layer_idx: int, cfg: ModelConfig) -> str:
+    every = cfg.xlstm.slstm_every
+    return "slstm" if (every > 0 and layer_idx % every == 0) else "mlstm"
+
+
+def xlstm_init_state(cfg: ModelConfig, batch: int, kind: str):
+    hd, H = cfg.hd, cfg.n_heads
+    if kind == "mlstm":
+        return {
+            "C": jnp.zeros((batch, H, hd, hd), jnp.float32),
+            "n": jnp.zeros((batch, H, hd), jnp.float32),
+            "m": jnp.zeros((batch, H), jnp.float32),
+        }
+    return {
+        "c": jnp.zeros((batch, H * hd), jnp.float32),
+        "n": jnp.zeros((batch, H * hd), jnp.float32),
+        "m": jnp.full((batch, H * hd), -1e30, jnp.float32),
+    }

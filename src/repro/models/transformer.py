@@ -1,0 +1,434 @@
+"""Decoder-only transformer (dense / MoE / VLM), encoder-decoder
+(whisper), and the xLSTM stack.
+
+Layer stacks use ``lax.scan`` over stacked parameters wherever the blocks
+are uniform (dense/MoE decoders) to keep the lowered HLO compact for the
+512-device dry-run; small non-uniform stacks (whisper 4+4, xLSTM 12) use
+python loops.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers, moe as moe_mod, ssm
+from .config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+# =============================================================================
+# Uniform decoder block (dense or MoE FFN)
+# =============================================================================
+
+def block_init(key, cfg: ModelConfig, dtype) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "ln1": layers.norm_init(cfg.d_model, cfg.norm, dtype),
+        "attn": layers.attention_init(k1, cfg, dtype),
+        "ln2": layers.norm_init(cfg.d_model, cfg.norm, dtype),
+    }
+    if cfg.family == "moe" or (cfg.moe is not None and cfg.moe.layout == "all"):
+        p["moe"] = moe_mod.moe_init(k2, cfg, dtype)
+    else:
+        p["mlp"] = layers.mlp_init(k3, cfg, dtype)
+    return p
+
+
+def block_apply(
+    p: Params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    positions: jax.Array,
+    cache: Optional[Dict[str, jax.Array]] = None,
+    cache_index: Optional[jax.Array] = None,
+    attn_impl: str = "auto",
+    moe_capacity: Optional[int] = None,
+):
+    h = layers.norm_apply(p["ln1"], x, cfg.norm, cfg.norm_eps)
+    a, new_cache = layers.attention_apply(
+        p["attn"], h, cfg, positions=positions, cache=cache,
+        cache_index=cache_index, causal=True, attn_impl=attn_impl,
+    )
+    x = x + a
+    h = layers.norm_apply(p["ln2"], x, cfg.norm, cfg.norm_eps)
+    if "moe" in p:
+        f = moe_mod.moe_apply(p["moe"], h, cfg, capacity=moe_capacity)
+    else:
+        f = layers.mlp_apply(p["mlp"], h, cfg)
+    return x + f, new_cache
+
+
+# =============================================================================
+# Decoder-only model (dense | moe | vlm)
+# =============================================================================
+
+def decoder_init(cfg: ModelConfig, key) -> Params:
+    dtype = jnp.dtype(cfg.param_dtype)
+    k_emb, k_blocks, k_head = jax.random.split(key, 3)
+    block_keys = jax.random.split(k_blocks, cfg.n_layers)
+    blocks = jax.vmap(lambda k: block_init(k, cfg, dtype))(block_keys)
+    p = {
+        "embed": layers.embed_init(k_emb, cfg, dtype),
+        "blocks": blocks,
+        "ln_f": layers.norm_init(cfg.d_model, cfg.norm, dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = layers.dense_init(
+            k_head, cfg.d_model, cfg.vocab, dtype,
+            scale=1.0 / math.sqrt(cfg.d_model),
+        )
+    return p
+
+
+def _scan_blocks(params_blocks, x, cfg, *, positions, attn_impl,
+                 moe_capacity, caches=None, cache_index=None):
+    """scan over stacked block params (and stacked caches, if serving)."""
+
+    def body(carry, xs):
+        h = carry
+        if caches is None:
+            bp = xs
+            h, _ = block_apply(
+                bp, h, cfg, positions=positions, attn_impl=attn_impl,
+                moe_capacity=moe_capacity,
+            )
+            return h, None
+        bp, c = xs
+        h, new_c = block_apply(
+            bp, h, cfg, positions=positions, cache=c,
+            cache_index=cache_index, attn_impl=attn_impl,
+            moe_capacity=moe_capacity,
+        )
+        return h, new_c
+
+    if cfg.remat == "block":
+        body = jax.checkpoint(body)
+
+    xs = params_blocks if caches is None else (params_blocks, caches)
+    x, new_caches = jax.lax.scan(body, x, xs)
+    return x, new_caches
+
+
+def decoder_forward(
+    params: Params,
+    tokens: jax.Array,                 # (B, T)
+    cfg: ModelConfig,
+    *,
+    attn_impl: str = "auto",
+    moe_capacity: Optional[int] = None,
+) -> jax.Array:
+    B, T = tokens.shape
+    x = layers.embed_apply(params["embed"], tokens, cfg)
+    positions = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+    x, _ = _scan_blocks(
+        params["blocks"], x, cfg, positions=positions, attn_impl=attn_impl,
+        moe_capacity=moe_capacity,
+    )
+    x = layers.norm_apply(params["ln_f"], x, cfg.norm, cfg.norm_eps)
+    return layers.unembed_apply(
+        params["embed"], params.get("head"), x, cfg
+    )
+
+
+def decoder_init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.hd)
+    dt = jnp.dtype(cfg.compute_dtype)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def decoder_prefill(
+    params: Params,
+    tokens: jax.Array,
+    cache: Params,
+    cfg: ModelConfig,
+    *,
+    attn_impl: str = "auto",
+    moe_capacity: Optional[int] = None,
+) -> Tuple[jax.Array, Params]:
+    """Run the prompt; returns (last-position logits, filled cache)."""
+    B, T = tokens.shape
+    x = layers.embed_apply(params["embed"], tokens, cfg)
+    positions = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+    caches = {"k": cache["k"], "v": cache["v"]}
+    # scan wants per-layer leading axis on cache
+    x, new_caches = _scan_blocks(
+        params["blocks"], x, cfg, positions=positions, attn_impl=attn_impl,
+        moe_capacity=moe_capacity,
+        caches=caches, cache_index=jnp.int32(0),
+    )
+    x = layers.norm_apply(params["ln_f"], x, cfg.norm, cfg.norm_eps)
+    logits = layers.unembed_apply(
+        params["embed"], params.get("head"), x[:, -1:], cfg
+    )
+    return logits[:, 0], new_caches
+
+
+def decoder_decode_step(
+    params: Params,
+    token: jax.Array,                  # (B,) int32
+    cache: Params,
+    cache_index: jax.Array,            # scalar int32: write position
+    cfg: ModelConfig,
+    *,
+    moe_capacity: Optional[int] = None,
+) -> Tuple[jax.Array, Params]:
+    B = token.shape[0]
+    x = layers.embed_apply(params["embed"], token[:, None], cfg)
+    if isinstance(cache_index, jax.Array) and cache_index.ndim == 1:
+        positions = cache_index[:, None]                    # per-slot decode
+    else:
+        positions = jnp.broadcast_to(cache_index[None, None], (B, 1))
+    x, new_caches = _scan_blocks(
+        params["blocks"], x, cfg, positions=positions, attn_impl="xla",
+        moe_capacity=moe_capacity,
+        caches=cache, cache_index=cache_index,
+    )
+    x = layers.norm_apply(params["ln_f"], x, cfg.norm, cfg.norm_eps)
+    logits = layers.unembed_apply(
+        params["embed"], params.get("head"), x, cfg
+    )
+    return logits[:, 0], new_caches
+
+
+# =============================================================================
+# Encoder-decoder (whisper backbone; conv frontend stubbed per assignment)
+# =============================================================================
+
+def encdec_init(cfg: ModelConfig, key) -> Params:
+    dtype = jnp.dtype(cfg.param_dtype)
+    keys = jax.random.split(key, 6)
+
+    def enc_block(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "ln1": layers.norm_init(cfg.d_model, cfg.norm, dtype),
+            "attn": layers.attention_init(k1, cfg, dtype),
+            "ln2": layers.norm_init(cfg.d_model, cfg.norm, dtype),
+            "mlp": layers.mlp_init(k2, cfg, dtype),
+        }
+
+    def dec_block(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {
+            "ln1": layers.norm_init(cfg.d_model, cfg.norm, dtype),
+            "self_attn": layers.attention_init(k1, cfg, dtype),
+            "ln_x": layers.norm_init(cfg.d_model, cfg.norm, dtype),
+            "cross_attn": layers.attention_init(k2, cfg, dtype),
+            "ln2": layers.norm_init(cfg.d_model, cfg.norm, dtype),
+            "mlp": layers.mlp_init(k3, cfg, dtype),
+        }
+
+    enc_keys = jax.random.split(keys[0], cfg.n_encoder_layers)
+    dec_keys = jax.random.split(keys[1], cfg.n_layers)
+    return {
+        "embed": layers.embed_init(keys[2], cfg, dtype),
+        "enc_blocks": [enc_block(k) for k in enc_keys],
+        "dec_blocks": [dec_block(k) for k in dec_keys],
+        "ln_enc": layers.norm_init(cfg.d_model, cfg.norm, dtype),
+        "ln_f": layers.norm_init(cfg.d_model, cfg.norm, dtype),
+    }
+
+
+def encode(params: Params, frames: jax.Array, cfg: ModelConfig,
+           *, attn_impl: str = "auto") -> jax.Array:
+    """frames: (B, n_frames, d_model) -- precomputed stub embeddings."""
+    B, Tf, _ = frames.shape
+    pe = layers.sinusoidal_positions(Tf, cfg.d_model)
+    x = frames.astype(cfg.compute_dtype) + pe.astype(cfg.compute_dtype)[None]
+    positions = jnp.broadcast_to(jnp.arange(Tf)[None], (B, Tf))
+
+    def enc_block(bp, x):
+        h = layers.norm_apply(bp["ln1"], x, cfg.norm, cfg.norm_eps)
+        a, _ = layers.attention_apply(
+            bp["attn"], h, cfg, positions=positions, causal=False,
+            attn_impl=attn_impl,
+        )
+        x = x + a
+        h = layers.norm_apply(bp["ln2"], x, cfg.norm, cfg.norm_eps)
+        return x + layers.mlp_apply(bp["mlp"], h, cfg)
+
+    if cfg.remat == "block":
+        enc_block = jax.checkpoint(enc_block)
+    for bp in params["enc_blocks"]:
+        x = enc_block(bp, x)
+    return layers.norm_apply(params["ln_enc"], x, cfg.norm, cfg.norm_eps)
+
+
+def encdec_forward(
+    params: Params,
+    frames: jax.Array,                  # (B, n_frames, d_model)
+    tokens: jax.Array,                  # (B, T)
+    cfg: ModelConfig,
+    *,
+    attn_impl: str = "auto",
+) -> jax.Array:
+    enc = encode(params, frames, cfg, attn_impl=attn_impl)
+    B, T = tokens.shape
+    x = layers.embed_apply(params["embed"], tokens, cfg)
+    pe = layers.sinusoidal_positions(T, cfg.d_model).astype(x.dtype)
+    x = x + pe[None]
+    positions = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+
+    def dec_block(bp, x):
+        h = layers.norm_apply(bp["ln1"], x, cfg.norm, cfg.norm_eps)
+        a, _ = layers.attention_apply(
+            bp["self_attn"], h, cfg, positions=positions, causal=True,
+            attn_impl=attn_impl,
+        )
+        x = x + a
+        h = layers.norm_apply(bp["ln_x"], x, cfg.norm, cfg.norm_eps)
+        a, _ = layers.attention_apply(
+            bp["cross_attn"], h, cfg, positions=positions, kv=(enc, enc),
+            causal=False, attn_impl=attn_impl,
+        )
+        x = x + a
+        h = layers.norm_apply(bp["ln2"], x, cfg.norm, cfg.norm_eps)
+        return x + layers.mlp_apply(bp["mlp"], h, cfg)
+
+    if cfg.remat == "block":
+        dec_block = jax.checkpoint(dec_block)
+    for bp in params["dec_blocks"]:
+        x = dec_block(bp, x)
+    x = layers.norm_apply(params["ln_f"], x, cfg.norm, cfg.norm_eps)
+    return layers.unembed_apply(params["embed"], None, x, cfg)
+
+
+def encdec_init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    dt = jnp.dtype(cfg.compute_dtype)
+    per_layer = {
+        "k": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.hd), dt),
+        "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.hd), dt),
+    }
+    return {
+        "self": [dict(per_layer) for _ in range(cfg.n_layers)],
+        # encoder output buffer; overwritten at prefill
+        "enc": jnp.zeros((batch, cfg.n_audio_frames, cfg.d_model), dt),
+    }
+
+
+def encdec_prefill(params, frames, tokens, cache, cfg,
+                   *, attn_impl: str = "auto"):
+    enc = encode(params, frames, cfg, attn_impl=attn_impl)
+    cache = dict(cache)
+    cache["enc"] = enc
+    B, T = tokens.shape
+    x = layers.embed_apply(params["embed"], tokens, cfg)
+    pe = layers.sinusoidal_positions(T, cfg.d_model).astype(x.dtype)
+    x = x + pe[None]
+    positions = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+    new_self = []
+    for bp, c in zip(params["dec_blocks"], cache["self"]):
+        h = layers.norm_apply(bp["ln1"], x, cfg.norm, cfg.norm_eps)
+        a, nc = layers.attention_apply(
+            bp["self_attn"], h, cfg, positions=positions, cache=c,
+            cache_index=jnp.int32(0), causal=True, attn_impl="xla",
+        )
+        new_self.append(nc)
+        x = x + a
+        h = layers.norm_apply(bp["ln_x"], x, cfg.norm, cfg.norm_eps)
+        a, _ = layers.attention_apply(
+            bp["cross_attn"], h, cfg, positions=positions, kv=(enc, enc),
+            causal=False, attn_impl="xla",
+        )
+        x = x + a
+        h = layers.norm_apply(bp["ln2"], x, cfg.norm, cfg.norm_eps)
+        x = x + layers.mlp_apply(bp["mlp"], h, cfg)
+    x = layers.norm_apply(params["ln_f"], x, cfg.norm, cfg.norm_eps)
+    logits = layers.unembed_apply(params["embed"], None, x[:, -1:], cfg)
+    cache["self"] = new_self
+    return logits[:, 0], cache
+
+
+def encdec_decode_step(params, token, cache, cache_index, cfg):
+    B = token.shape[0]
+    enc = cache["enc"]
+    x = layers.embed_apply(params["embed"], token[:, None], cfg)
+    Tmax = cache["self"][0]["k"].shape[1]
+    pe = layers.sinusoidal_positions(Tmax, cfg.d_model).astype(x.dtype)
+    x = x + jax.lax.dynamic_slice_in_dim(pe, cache_index, 1, 0)[None]
+    positions = jnp.broadcast_to(cache_index[None, None], (B, 1))
+    new_self = []
+    for bp, c in zip(params["dec_blocks"], cache["self"]):
+        h = layers.norm_apply(bp["ln1"], x, cfg.norm, cfg.norm_eps)
+        a, nc = layers.attention_apply(
+            bp["self_attn"], h, cfg, positions=positions, cache=c,
+            cache_index=cache_index, causal=True, attn_impl="xla",
+        )
+        new_self.append(nc)
+        x = x + a
+        h = layers.norm_apply(bp["ln_x"], x, cfg.norm, cfg.norm_eps)
+        a, _ = layers.attention_apply(
+            bp["cross_attn"], h, cfg, positions=positions, kv=(enc, enc),
+            causal=False, attn_impl="xla",
+        )
+        x = x + a
+        h = layers.norm_apply(bp["ln2"], x, cfg.norm, cfg.norm_eps)
+        x = x + layers.mlp_apply(bp["mlp"], h, cfg)
+    x = layers.norm_apply(params["ln_f"], x, cfg.norm, cfg.norm_eps)
+    logits = layers.unembed_apply(params["embed"], None, x, cfg)
+    new_cache = dict(cache)
+    new_cache["self"] = new_self
+    return logits[:, 0], new_cache
+
+
+# =============================================================================
+# xLSTM stack (12 small layers: python loop)
+# =============================================================================
+
+def xlstm_init(cfg: ModelConfig, key) -> Params:
+    dtype = jnp.dtype(cfg.param_dtype)
+    keys = jax.random.split(key, cfg.n_layers + 2)
+    blocks = []
+    for i in range(cfg.n_layers):
+        kind = ssm.xlstm_block_kind(i, cfg)  # static per index: not stored
+        init = ssm.slstm_init if kind == "slstm" else ssm.mlstm_init
+        blocks.append({
+            "ln": layers.norm_init(cfg.d_model, cfg.norm, dtype),
+            "core": init(keys[i], cfg, dtype),
+        })
+    return {
+        "embed": layers.embed_init(keys[-2], cfg, dtype),
+        "blocks": blocks,
+        "ln_f": layers.norm_init(cfg.d_model, cfg.norm, dtype),
+    }
+
+
+def xlstm_forward(params, tokens, cfg, *, states=None):
+    """states=None: training fwd.  Otherwise a list of per-layer recurrent
+    states (the O(1) 'cache'); returns (logits, new_states)."""
+    x = layers.embed_apply(params["embed"], tokens, cfg)
+    new_states = [] if states is not None else None
+    for i, bp in enumerate(params["blocks"]):
+        kind = ssm.xlstm_block_kind(i, cfg)
+        h = layers.norm_apply(bp["ln"], x, cfg.norm, cfg.norm_eps)
+        if kind == "slstm":
+            apply = ssm.slstm_apply
+        elif ssm.MLSTM_CHUNK and tokens.shape[1] > ssm.MLSTM_CHUNK:
+            import functools as _ft
+            apply = _ft.partial(
+                ssm.mlstm_apply_chunked, chunk=ssm.MLSTM_CHUNK
+            )
+        else:
+            apply = ssm.mlstm_apply
+        st = states[i] if states is not None else None
+        y, new_st = apply(bp["core"], h, cfg, state=st)
+        if states is not None:
+            new_states.append(new_st)
+        x = x + y
+    x = layers.norm_apply(params["ln_f"], x, cfg.norm, cfg.norm_eps)
+    logits = layers.unembed_apply(params["embed"], None, x, cfg)
+    if states is not None:
+        return logits, new_states
+    return logits
+
+
+def xlstm_init_states(cfg: ModelConfig, batch: int):
+    return [
+        ssm.xlstm_init_state(cfg, batch, ssm.xlstm_block_kind(i, cfg))
+        for i in range(cfg.n_layers)
+    ]

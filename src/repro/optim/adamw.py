@@ -1,0 +1,95 @@
+"""Sharded AdamW (built in-repo: no optax in the container).
+
+Optimizer state mirrors parameter sharding (first/second moments inherit
+each param's PartitionSpec through GSPMD propagation), i.e. the memory
+behaves like ZeRO along the TP axis for sharded params.  Moments are kept
+in f32 regardless of param dtype (mixed-precision master-moment style).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def cosine_schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(1.0, cfg.warmup_steps)
+    prog = (step - cfg.warmup_steps) / jnp.maximum(
+        1.0, cfg.total_steps - cfg.warmup_steps
+    )
+    prog = jnp.clip(prog, 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog)
+    )
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def adamw_init(params: Any) -> Any:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+
+
+def adamw_update(
+    cfg: AdamWConfig,
+    grads: Any,
+    opt_state: Any,
+    params: Any,
+) -> Tuple[Any, Any, dict]:
+    step = opt_state["step"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+    lr = cosine_schedule(cfg, step)
+    b1t = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2t = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * clip
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * g * g
+        mhat = mu / b1t
+        nhat = nu / b2t
+        delta = mhat / (jnp.sqrt(nhat) + cfg.eps)
+        wd = cfg.weight_decay * p.astype(jnp.float32) if p.ndim >= 2 else 0.0
+        new_p = p.astype(jnp.float32) - lr * (delta + wd)
+        return new_p.astype(p.dtype), mu, nu
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(opt_state["mu"])
+    flat_nu = treedef.flatten_up_to(opt_state["nu"])
+    out = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_params = treedef.unflatten([o[0] for o in out])
+    new_state = {
+        "mu": treedef.unflatten([o[1] for o in out]),
+        "nu": treedef.unflatten([o[2] for o in out]),
+        "step": step,
+    }
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, new_state, metrics

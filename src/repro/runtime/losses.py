@@ -1,0 +1,33 @@
+"""Losses.  Cross entropy is written as plain log_softmax so that with a
+vocab-sharded head GSPMD lowers the reductions into partial-reduce +
+all-reduce (vocab-parallel CE) -- no bespoke collective code needed."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  ignore_id: int = -1) -> jax.Array:
+    """logits: (B, T, V) f32; labels: (B, T) int32.
+
+    The label pick is a masked reduction (iota == label) rather than a
+    gather: with a vocab-sharded V axis, take_along_axis forces GSPMD to
+    all-gather the full logits, while the masked sum keeps every term a
+    partial-reduce + scalar all-reduce (vocab-parallel CE)."""
+    lf = logits.astype(jnp.float32)
+    m = jnp.max(lf, axis=-1, keepdims=True)
+    lse = jnp.log(jnp.sum(jnp.exp(lf - m), axis=-1)) + m[..., 0]
+    V = lf.shape[-1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, lf.shape, lf.ndim - 1)
+    picked = jnp.sum(
+        jnp.where(iota == labels[..., None], lf, 0.0), axis=-1
+    )
+    ll = picked - lse
+    mask = (labels != ignore_id).astype(jnp.float32)
+    return -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def next_token_loss(logits: jax.Array, tokens: jax.Array) -> jax.Array:
+    """Shifted LM loss when only tokens are provided."""
+    return cross_entropy(logits[:, :-1], tokens[:, 1:])

@@ -1,0 +1,61 @@
+"""Step-time monitoring: straggler detection + elastic re-mesh hooks.
+
+At pod scale, a slow host (thermal throttling, failing NIC) shows up as a
+step-time outlier on every worker because SPMD steps are synchronous.  The
+monitor keeps an EWMA of step time and flags steps slower than
+``straggler_factor`` x EWMA; the runtime's ``on_straggler`` hook can then
+evict the host / trigger elastic re-meshing (``plan_elastic_remesh``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+
+@dataclasses.dataclass
+class StepMonitor:
+    straggler_factor: float = 3.0
+    alpha: float = 0.1            # EWMA weight
+    warmup: int = 3               # ignore compile-dominated first steps
+
+    def __post_init__(self) -> None:
+        self.ewma: Optional[float] = None
+        self.count = 0
+        self.flags: List[int] = []
+
+    def record(self, dt: float) -> bool:
+        self.count += 1
+        if self.count <= self.warmup:
+            return False
+        if self.ewma is None:
+            self.ewma = dt
+            return False
+        flagged = dt > self.straggler_factor * self.ewma
+        if flagged:
+            self.flags.append(self.count)
+        else:
+            # don't poison the mean with outliers
+            self.ewma = (1 - self.alpha) * self.ewma + self.alpha * dt
+        return flagged
+
+
+def plan_elastic_remesh(
+    n_healthy: int, *, model_axis: int
+) -> Tuple[int, ...]:
+    """Given the surviving device count, pick the largest (data, model)
+    mesh that preserves the TP degree (params reshard along data only --
+    cheapest recovery path).  Returns the new mesh shape.
+
+    E.g. 256 devices, model=16 -> (16, 16); after losing a host of 8:
+    248 -> (15, 16) needs 240; we round data down.
+    """
+    if n_healthy < model_axis:
+        raise ValueError("fewer devices than the TP degree: cold restart")
+    data = n_healthy // model_axis
+    return (data, model_axis)
+
+
+def rebalance_batch(global_batch: int, data_axis: int) -> int:
+    """Largest per-step batch divisible by the new data axis (keeps the
+    optimizer's effective batch as close as possible after re-meshing)."""
+    return (global_batch // data_axis) * data_axis

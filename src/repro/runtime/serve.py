@@ -1,0 +1,158 @@
+"""Serving runtime: prefill/decode steps + a slot-based batch scheduler.
+
+The scheduler is a small continuous-batching engine: requests claim cache
+slots; each engine tick runs one batched decode step over every active
+slot; finished slots are recycled and newly queued prompts are prefilled
+into free slots.  Prefill and decode are separate jitted programs
+(the assigned ``prefill_32k`` / ``decode_32k`` shapes lower exactly these
+two step functions).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.api import Model
+
+
+def make_prefill_step(model: Model, *, moe_capacity=None) -> Callable:
+    def prefill(params, batch, cache):
+        return model.prefill(params, batch, cache, moe_capacity=moe_capacity)
+
+    return prefill
+
+
+def make_decode_step(model: Model, *, moe_capacity=None) -> Callable:
+    def decode(params, token, cache, cache_index):
+        return model.decode_step(
+            params, token, cache, cache_index, moe_capacity=moe_capacity
+        )
+
+    return decode
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray          # (T,) int32
+    max_new_tokens: int = 16
+    frames: Optional[np.ndarray] = None
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    """Single-host batched serving over a fixed slot count.
+
+    For simplicity each slot has its own cache (batch axis of the shared
+    cache pytree); prompts in one admission wave are padded to a common
+    length and prefilled together.
+    """
+
+    def __init__(self, model: Model, params, *, slots: int = 4,
+                 max_len: int = 256, temperature: float = 0.0) -> None:
+        self.model = model
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.temperature = temperature
+        self.cache = model.init_cache(slots, max_len)
+        # identify each cache leaf's slot axis structurally (leaf sizes can
+        # collide with the slot count, e.g. n_layers == slots)
+        sa = jax.eval_shape(lambda: model.init_cache(slots, max_len))
+        sb = jax.eval_shape(lambda: model.init_cache(slots + 1, max_len))
+        self._slot_axis = jax.tree.map(
+            lambda a, b: next(
+                (i for i, (x, y) in enumerate(zip(a.shape, b.shape))
+                 if x != y), None,
+            ),
+            sa, sb,
+        )
+        self._slot_axis_leaves = jax.tree.leaves(self._slot_axis)
+        self.lengths = np.zeros(slots, np.int32)
+        self.active: List[Optional[Request]] = [None] * slots
+        self.queue: List[Request] = []
+        self._prefill = jax.jit(make_prefill_step(model))
+        self._decode = jax.jit(make_decode_step(model))
+        self._next_tok = np.zeros(slots, np.int32)
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        free = [i for i, a in enumerate(self.active) if a is None]
+        wave = []
+        while free and self.queue:
+            slot = free.pop(0)
+            req = self.queue.pop(0)
+            self.active[slot] = req
+            wave.append((slot, req))
+        if not wave:
+            return
+        # pad the wave to a common prompt length, prefill slot-by-slot
+        # (per-slot prefill keeps cache indices exact; a production engine
+        # would batch same-length buckets)
+        for slot, req in wave:
+            T = len(req.prompt)
+            tokens = jnp.asarray(req.prompt[None, :], jnp.int32)
+            batch = {"tokens": tokens}
+            if req.frames is not None:
+                batch["frames"] = jnp.asarray(req.frames[None])
+            one_cache = self.model.init_cache(1, self.max_len)
+            logits, one_cache = self._prefill(self.params, batch, one_cache)
+            self._write_slot(one_cache, slot)
+            self.lengths[slot] = T
+            self._next_tok[slot] = int(jnp.argmax(logits[0]))
+
+    def _write_slot(self, one_cache, slot: int) -> None:
+        flat_full, treedef = jax.tree.flatten(self.cache)
+        flat_one = treedef.flatten_up_to(one_cache)
+
+        out = []
+        for full, one, ax in zip(
+            flat_full, flat_one, self._slot_axis_leaves
+        ):
+            if ax is None:
+                out.append(full)
+                continue
+            out.append(
+                jax.lax.dynamic_update_slice_in_dim(
+                    full, jax.numpy.asarray(one, full.dtype), slot, axis=ax
+                )
+            )
+        self.cache = treedef.unflatten(out)
+
+    def step(self) -> None:
+        """One engine tick: admit new requests, decode all active slots."""
+        self._admit()
+        live = [i for i, a in enumerate(self.active) if a is not None]
+        if not live:
+            return
+        # batched decode over all slots at their own cache positions
+        # (continuous batching; idle slots write to their stale position,
+        # harmless since their outputs are discarded)
+        idx = jnp.asarray(self.lengths, jnp.int32)
+        tok = jnp.asarray(self._next_tok, jnp.int32)
+        logits, self.cache = self._decode(self.params, tok, self.cache, idx)
+        nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
+        for i in live:
+            req = self.active[i]
+            req.output.append(int(self._next_tok[i]))
+            self.lengths[i] += 1
+            self._next_tok[i] = nxt[i]
+            if (
+                len(req.output) >= req.max_new_tokens
+                or self.lengths[i] >= self.max_len - 1
+            ):
+                req.done = True
+                self.active[i] = None
+
+    def run_until_drained(self, max_ticks: int = 1000) -> None:
+        for _ in range(max_ticks):
+            if not self.queue and all(a is None for a in self.active):
+                return
+            self.step()

@@ -1,0 +1,67 @@
+"""Roofline analysis: collective-bytes HLO parsing + report math +
+small-scale dry-run (the real 512-way dry-run runs via launch.dryrun)."""
+import numpy as np
+import pytest
+
+from repro.analysis import roofline
+
+
+def test_collective_parser_basic():
+    hlo = """
+  %all-reduce.1 = f32[1024,512]{1,0} all-reduce(%add.3), channel_id=1
+  %ag = bf16[8,256]{1,0} all-gather(%p0), dimensions={0}
+  %rs = f32[128]{0} reduce-scatter(%x), dimensions={0}
+  %cp = f32[64,64]{1,0} collective-permute(%y), source_target_pairs={{0,1}}
+  %unrelated = f32[2,2]{1,0} add(%a, %b)
+"""
+    got = roofline.collective_bytes(hlo)
+    assert got["all-reduce"] == 1024 * 512 * 4
+    assert got["all-gather"] == 8 * 256 * 2
+    assert got["reduce-scatter"] == 128 * 4
+    assert got["collective-permute"] == 64 * 64 * 4
+
+
+def test_collective_parser_tuple_and_async():
+    hlo = """
+  %a2a = (f32[8,16]{1,0}, f32[8,16]{1,0}) all-to-all(%x, %y), dimensions={0}
+  %ar-start = f32[100]{0} all-reduce-start(%z), channel_id=3
+  %ar-done = f32[100]{0} all-reduce-done(%ar-start)
+"""
+    got = roofline.collective_bytes(hlo)
+    assert got["all-to-all"] == 2 * 8 * 16 * 4
+    assert got["all-reduce"] == 100 * 4  # start counted, done not
+
+
+def test_report_terms_and_bottleneck():
+    r = roofline.RooflineReport(
+        arch="a", shape="s", mesh="single", chips=256,
+        device_flops=197e12,          # exactly 1s of compute
+        device_bytes=819e9 * 0.5,     # 0.5s of memory
+        coll_bytes=50e9 * 0.25,       # 0.25s of collectives
+        coll_breakdown={}, bytes_per_device=10,
+        model_flops=197e12 * 256 * 0.8,
+    )
+    assert r.t_compute == pytest.approx(1.0)
+    assert r.t_memory == pytest.approx(0.5)
+    assert r.t_collective == pytest.approx(0.25)
+    assert r.bottleneck == "compute"
+    assert r.useful_flops_ratio == pytest.approx(0.8)
+    assert r.roofline_fraction == pytest.approx(1.0)
+
+
+def test_model_flops():
+    assert roofline.model_flops(params=10, tokens=5, kind="train") == 300
+    assert roofline.model_flops(params=10, tokens=5, kind="prefill") == 100
+    assert roofline.model_flops(
+        params=10, tokens=5, kind="train", active_params=4
+    ) == 120
+
+
+def test_format_table_runs():
+    r = roofline.RooflineReport(
+        arch="x", shape="train_4k", mesh="single", chips=256,
+        device_flops=1e12, device_bytes=1e12, coll_bytes=1e9,
+        coll_breakdown={}, bytes_per_device=2 ** 30, model_flops=1e14,
+    )
+    s = roofline.format_table([r])
+    assert "train_4k" in s and "memory" in s

@@ -1,0 +1,84 @@
+"""CFD operators end-to-end vs the numpy oracles, all backends."""
+import numpy as np
+import pytest
+
+from repro.cfd import operators, reference, simulation
+from repro.cfd.simulation import SimConfig
+
+
+@pytest.mark.parametrize("backend", ["xla", "staged"])
+@pytest.mark.parametrize("p", [5, 7])
+def test_inverse_helmholtz_backends(backend, p, rng):
+    c = operators.build_inverse_helmholtz(p, backend=backend)
+    E = 6
+    S = rng.uniform(-1, 1, (p, p)).astype(np.float32)
+    D = rng.uniform(-1, 1, (E, p, p, p)).astype(np.float32)
+    u = rng.uniform(-1, 1, (E, p, p, p)).astype(np.float32)
+    got = np.asarray(c.batched_fn({"S": S, "D": D, "u": u})["v"])
+    want = reference.inverse_helmholtz_batch(
+        S.astype(np.float64), D.astype(np.float64), u.astype(np.float64)
+    )
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+
+def test_interpolation(rng):
+    n, m = 7, 9
+    c = operators.build_interpolation(n, m)
+    A = rng.uniform(-1, 1, (m, n)).astype(np.float32)
+    u = rng.uniform(-1, 1, (3, n, n, n)).astype(np.float32)
+    got = np.asarray(c.batched_fn({"A": A, "u": u})["v"])
+    for e in range(3):
+        want = reference.interpolation(
+            A.astype(np.float64), u[e].astype(np.float64)
+        )
+        np.testing.assert_allclose(got[e], want, rtol=3e-4, atol=3e-4)
+
+
+def test_gradient(rng):
+    nx, ny, nz = 8, 7, 6
+    c = operators.build_gradient(nx, ny, nz)
+    Dx = rng.uniform(-1, 1, (nx, nx)).astype(np.float32)
+    Dy = rng.uniform(-1, 1, (ny, ny)).astype(np.float32)
+    Dz = rng.uniform(-1, 1, (nz, nz)).astype(np.float32)
+    u = rng.uniform(-1, 1, (2, nx, ny, nz)).astype(np.float32)
+    out = c.batched_fn({"Dx": Dx, "Dy": Dy, "Dz": Dz, "u": u})
+    for e in range(2):
+        gx, gy, gz = reference.gradient(
+            *(a.astype(np.float64) for a in (Dx, Dy, Dz)),
+            u[e].astype(np.float64),
+        )
+        np.testing.assert_allclose(np.asarray(out["gx"])[e], gx, rtol=3e-4, atol=3e-4)
+        np.testing.assert_allclose(np.asarray(out["gy"])[e], gy, rtol=3e-4, atol=3e-4)
+        np.testing.assert_allclose(np.asarray(out["gz"])[e], gz, rtol=3e-4, atol=3e-4)
+
+
+def test_simulation_driver_batching():
+    cfg = SimConfig(p=5, n_eq=512, batch_elements=128)
+    assert cfg.n_batches == 4
+    res = simulation.run_simulation(cfg, max_batches=2)
+    assert res.elements == 256
+    assert np.isfinite(res.checksum)
+
+
+def test_simulation_double_buffer_equivalence():
+    """Ping/pong staging must not change results (paper Fig. 14a)."""
+    a = simulation.run_simulation(
+        SimConfig(p=5, n_eq=256, batch_elements=64, double_buffer=True),
+        max_batches=3,
+    )
+    b = simulation.run_simulation(
+        SimConfig(p=5, n_eq=256, batch_elements=64, double_buffer=False),
+        max_batches=3,
+    )
+    assert abs(a.checksum - b.checksum) < 1e-3
+
+
+def test_batch_for_channel_matches_paper_sizing():
+    """Paper: E = elements whose I/O fits one 256 MB HBM pseudo-channel."""
+    E = SimConfig.batch_for_channel(11, bytes_per_scalar=8)
+    assert E == (256 * 2 ** 20) // (3 * 11 ** 3 * 8)
+
+
+def test_opcount_model():
+    assert reference.paper_flops_per_element(11) == 177023
+    assert reference.paper_flops_per_element(7) == 29155

@@ -1,0 +1,74 @@
+"""CFDlang front-end: parsing, verification, error paths."""
+import pytest
+
+from repro.core import dsl, ir
+
+
+def test_parse_inverse_helmholtz():
+    prog = dsl.inverse_helmholtz_program(7)
+    assert set(prog.inputs) == {"S", "D", "u"}
+    assert set(prog.outputs) == {"v"}
+    assert prog.outputs["v"].shape == (7, 7, 7)
+    assert prog.element_vars == ("u", "D", "v")
+
+
+def test_parse_preserves_literal_structure():
+    """The front-end must not canonicalize (paper section 3.3.1): the
+    contraction of the rank-9 outer product appears literally."""
+    prog = dsl.inverse_helmholtz_program(5)
+    # literal cost is O(p^9)-dominated, far above the factorized count
+    assert prog.total_flops() > 5 ** 9
+
+
+def test_interpolation_and_gradient_parse():
+    p1 = dsl.interpolation_program(7, 9)
+    assert p1.outputs["v"].shape == (9, 9, 9)
+    p2 = dsl.gradient_program(8, 7, 6)
+    assert p2.outputs["gx"].shape == (8, 7, 6)
+    assert p2.outputs["gy"].shape == (7, 8, 6)
+    assert p2.outputs["gz"].shape == (6, 8, 7)
+
+
+def test_parse_errors():
+    with pytest.raises(dsl.ParseError):
+        dsl.parse("var input A : [3 3]\nB = A")        # undeclared B
+    with pytest.raises(dsl.ParseError):
+        dsl.parse("var input A : [3 3]\nvar output B : [3]\nB = A")
+    with pytest.raises(dsl.ParseError):
+        dsl.parse("var input A : [3 3]\nvar input A : [3 3]")  # dup
+    with pytest.raises(dsl.ParseError):
+        # contraction of mismatched dims
+        dsl.parse(
+            "var input A : [3 4]\nvar output b : [1]\nb = A . [[0 1]]"
+        )
+
+
+def test_use_before_assignment_rejected():
+    src = """
+    var input A : [3 3]
+    var output v : [3 3]
+    var t : [3 3]
+    v = t * A
+    """
+    with pytest.raises(dsl.ParseError):
+        dsl.parse(src)
+
+
+def test_builder_matmul_matches_paper_encoding():
+    b = dsl.Builder()
+    A = b.input("A", (4, 5))
+    B = b.input("B", (5, 6))
+    b.output("C", b.matmul(A, B))
+    prog = b.program()
+    assert prog.outputs["C"].shape == (4, 6)
+
+
+def test_hadamard_and_add():
+    src = """
+    var input A : [3 3]
+    var input B : [3 3]
+    var output C : [3 3]
+    C = A * B + A
+    """
+    prog = dsl.parse(src)
+    assert isinstance(prog.outputs["C"], ir.Ewise)

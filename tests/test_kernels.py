@@ -1,0 +1,119 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode on CPU), with
+shape/dtype sweeps as required per kernel."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cfd import reference
+from repro.kernels.attention import ops as attn_ops
+from repro.kernels.attention.ref import attention_ref
+from repro.kernels.helmholtz import ops as hh_ops
+
+
+# ---------------------------------------------------------------------------
+# helmholtz kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("p", [3, 5, 7, 11])
+@pytest.mark.parametrize("be", [2, 4])
+def test_helmholtz_kernel_shapes(p, be, rng):
+    E = 8
+    S = rng.uniform(-1, 1, (p, p)).astype(np.float32)
+    D = rng.uniform(-1, 1, (E, p, p, p)).astype(np.float32)
+    u = rng.uniform(-1, 1, (E, p, p, p)).astype(np.float32)
+    got = np.asarray(
+        hh_ops.inverse_helmholtz(S, D, u, impl="interpret", block_elements=be)
+    )
+    want = reference.inverse_helmholtz_batch(
+        S.astype(np.float64), D.astype(np.float64), u.astype(np.float64)
+    )
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=5e-4)
+
+
+def test_helmholtz_kernel_bf16(rng):
+    p, E = 7, 4
+    S = rng.uniform(-1, 1, (p, p)).astype(np.float32)
+    D = rng.uniform(-1, 1, (E, p, p, p)).astype(np.float32)
+    u = rng.uniform(-1, 1, (E, p, p, p)).astype(np.float32)
+    got = np.asarray(
+        hh_ops.inverse_helmholtz(
+            jnp.asarray(S, jnp.bfloat16), jnp.asarray(D, jnp.bfloat16),
+            jnp.asarray(u, jnp.bfloat16), impl="interpret", block_elements=4,
+        ).astype(jnp.float32)
+    )
+    want = reference.inverse_helmholtz_batch(
+        S.astype(np.float64), D.astype(np.float64), u.astype(np.float64)
+    )
+    # bf16 storage, f32 accumulation: coarse bound
+    np.testing.assert_allclose(got, want, rtol=0.15, atol=0.3)
+
+
+def test_helmholtz_kernel_rejects_ragged_blocks(rng):
+    p = 5
+    S = rng.uniform(-1, 1, (p, p)).astype(np.float32)
+    D = rng.uniform(-1, 1, (6, p, p, p)).astype(np.float32)
+    u = rng.uniform(-1, 1, (6, p, p, p)).astype(np.float32)
+    with pytest.raises(ValueError):
+        hh_ops.inverse_helmholtz(S, D, u, impl="interpret", block_elements=4)
+
+
+# ---------------------------------------------------------------------------
+# flash attention kernel
+# ---------------------------------------------------------------------------
+
+SWEEP = [
+    # B, Hq, Hkv, Tq, Tk, d, causal
+    (2, 4, 2, 64, 64, 32, True),
+    (1, 8, 2, 32, 128, 16, True),     # GQA 4:1, cross-length causal
+    (2, 2, 2, 64, 64, 64, False),
+    (1, 4, 1, 128, 128, 32, True),    # MQA
+    (1, 2, 2, 16, 16, 128, True),
+]
+
+
+@pytest.mark.parametrize("case", SWEEP)
+def test_flash_attention_vs_oracle(case, rng):
+    B, Hq, Hkv, Tq, Tk, d, causal = case
+    q = rng.normal(size=(B, Hq, Tq, d)).astype(np.float32)
+    k = rng.normal(size=(B, Hkv, Tk, d)).astype(np.float32)
+    v = rng.normal(size=(B, Hkv, Tk, d)).astype(np.float32)
+    want = np.asarray(
+        attention_ref(
+            q.reshape(B * Hq, Tq, d), k.reshape(B * Hkv, Tk, d),
+            v.reshape(B * Hkv, Tk, d),
+            n_q_heads=Hq, n_kv_heads=Hkv, causal=causal,
+        )
+    ).reshape(B, Hq, Tq, d)
+    got = np.asarray(
+        attn_ops.multi_head_attention(
+            q, k, v, causal=causal, impl="interpret",
+            block_q=16, block_k=32,
+        )
+    )
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_block_size_invariance(rng):
+    B, Hq, Hkv, T, d = 1, 2, 1, 128, 32
+    q = rng.normal(size=(B, Hq, T, d)).astype(np.float32)
+    k = rng.normal(size=(B, Hkv, T, d)).astype(np.float32)
+    v = rng.normal(size=(B, Hkv, T, d)).astype(np.float32)
+    outs = [
+        np.asarray(attn_ops.multi_head_attention(
+            q, k, v, impl="interpret", block_q=bq, block_k=bk,
+        ))
+        for bq, bk in [(16, 16), (32, 64), (128, 128)]
+    ]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_xla_path_matches(rng):
+    B, Hq, Hkv, T, d = 2, 4, 2, 64, 32
+    q = rng.normal(size=(B, Hq, T, d)).astype(np.float32)
+    k = rng.normal(size=(B, Hkv, T, d)).astype(np.float32)
+    v = rng.normal(size=(B, Hkv, T, d)).astype(np.float32)
+    a = np.asarray(attn_ops.multi_head_attention(q, k, v, impl="xla"))
+    b = np.asarray(attn_ops.multi_head_attention(
+        q, k, v, impl="interpret", block_q=16, block_k=16))
+    np.testing.assert_allclose(a, b, rtol=2e-5, atol=2e-5)

@@ -1,0 +1,83 @@
+"""base2-analogue precision policies: fixed-point formats and the paper's
+MSE claims (ap_fixed<64,24> ~ 9.39e-22, ap_fixed<32,8> ~ 3.58e-12)."""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dsl, emit, rewrite
+from repro.core.precision import FIXED32, FIXED64, FixedPointPolicy
+
+
+def test_formats():
+    assert FIXED32.total_bits == 32 and FIXED32.frac_bits == 24
+    assert FIXED64.total_bits == 64 and FIXED64.frac_bits == 40
+    with pytest.raises(ValueError):
+        FixedPointPolicy(16, 8)
+    with pytest.raises(ValueError):
+        FixedPointPolicy(32, 40)
+
+
+def test_encode_decode_roundtrip():
+    with jax.enable_x64(True):
+        x = np.linspace(-0.99, 0.99, 101)
+        for pol in (FIXED32, FIXED64):
+            err = np.abs(np.asarray(pol.decode(pol.encode(x))) - x).max()
+            assert err <= 2.0 ** (-pol.frac_bits)
+
+
+@given(st.floats(-1, 1), st.floats(-1, 1))
+@settings(max_examples=50, deadline=None)
+def test_fmul_within_ulp(a, b):
+    with jax.enable_x64(True):
+        for pol, tol in ((FIXED32, 2 ** -22), (FIXED64, 2 ** -38)):
+            qa, qb = pol.encode(np.float64(a)), pol.encode(np.float64(b))
+            got = float(pol.decode(pol.fmul(qa, qb)))
+            assert abs(got - a * b) < tol
+
+
+def test_fixed64_large_magnitude():
+    """Q24.40 must handle the paper's 24 integer bits (values up to
+    ~2^23): products of large x small stay accurate."""
+    with jax.enable_x64(True):
+        a, b = 3000.5, 0.125
+        qa, qb = FIXED64.encode(np.float64(a)), FIXED64.encode(np.float64(b))
+        got = float(FIXED64.decode(FIXED64.fmul(qa, qb)))
+        assert abs(got - a * b) < 1e-6
+
+
+@pytest.mark.parametrize(
+    "pol,paper_mse,slack",
+    [(FIXED32, 3.58e-12, 100.0), (FIXED64, 9.39e-22, 100.0)],
+)
+def test_helmholtz_mse_matches_paper_order(pol, paper_mse, slack, rng):
+    """End-to-end fixed-point Inverse Helmholtz on [-1,1] data must land
+    within two orders of the paper's reported MSE."""
+    p = 7
+    prog = rewrite.optimize(dsl.inverse_helmholtz_program(p))
+    S = rng.uniform(-1, 1, (p, p))
+    D = rng.uniform(-1, 1, (p, p, p))
+    u = rng.uniform(-1, 1, (p, p, p))
+    t = np.einsum("il,jm,kn,lmn->ijk", S, S, S, u)
+    v = np.einsum("li,mj,nk,lmn->ijk", S, S, S, D * t)
+    with jax.enable_x64(True):
+        c = emit.compile_program(prog, policy=pol, jit=False)
+        env = {k: pol.encode(val) for k, val in
+               {"S": S, "D": D, "u": u}.items()}
+        got = np.asarray(pol.decode(c.element_fn(env)["v"]))
+    mse = float(np.mean((got - v) ** 2))
+    assert mse < paper_mse * slack
+    assert mse > 0  # fixed point is not exact
+
+
+def test_fixed_point_requires_factorized_program():
+    prog = dsl.inverse_helmholtz_program(3)  # literal: 4-ary einsum
+    flat = rewrite.flatten_products(prog)
+    with jax.enable_x64(True):
+        c = emit.compile_program(flat, policy=FIXED32, jit=False)
+        env = {
+            k: FIXED32.encode(np.zeros(v.shape))
+            for k, v in prog.inputs.items()
+        }
+        with pytest.raises(Exception):
+            c.element_fn(env)

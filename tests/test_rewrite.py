@@ -1,0 +1,103 @@
+"""Middle-end rewrites: factorization (the paper's key transform), CSE.
+
+Includes hypothesis property tests: for random contraction-of-product
+programs, the optimized program computes the same function at lower or
+equal cost.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dsl, emit, ir, rewrite
+from repro.core.precision import F32
+from repro.cfd import reference
+
+
+@pytest.mark.parametrize("p", [3, 5, 7, 11, 13])
+def test_factorized_flops_match_paper_model(p):
+    """Paper Eq. (2): the factorized Inverse Helmholtz costs exactly
+    (12p+1)p^3 flops."""
+    prog = rewrite.optimize(dsl.inverse_helmholtz_program(p))
+    assert prog.total_flops() == (12 * p + 1) * p ** 3
+
+
+@pytest.mark.parametrize("p", [3, 5, 7])
+def test_factorization_preserves_semantics(p, rng):
+    prog = dsl.inverse_helmholtz_program(p)
+    opt = rewrite.optimize(prog)
+    S = rng.uniform(-1, 1, (p, p)).astype(np.float32)
+    D = rng.uniform(-1, 1, (p, p, p)).astype(np.float32)
+    u = rng.uniform(-1, 1, (p, p, p)).astype(np.float32)
+    env = {"S": S, "D": D, "u": u}
+    naive = emit.compile_program(prog, policy=F32).element_fn(env)["v"]
+    fact = emit.compile_program(opt, policy=F32).element_fn(env)["v"]
+    want = reference.inverse_helmholtz(
+        S.astype(np.float64), D.astype(np.float64), u.astype(np.float64)
+    )
+    np.testing.assert_allclose(np.asarray(fact), want, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(naive), want, rtol=2e-4, atol=2e-4)
+
+
+def test_factorization_reduces_flops_dramatically():
+    prog = dsl.inverse_helmholtz_program(11)
+    opt = rewrite.optimize(prog)
+    assert prog.total_flops() / opt.total_flops() > 1000
+
+
+def test_cse_shares_repeated_inputs():
+    prog = rewrite.optimize(dsl.inverse_helmholtz_program(5))
+    inputs = [
+        n for n in prog.toposort() if isinstance(n, ir.Input)
+    ]
+    names = [n.name for n in inputs]
+    assert sorted(names) == ["D", "S", "u"]  # S appears once after CSE
+
+
+def test_optimize_idempotent():
+    prog = rewrite.optimize(dsl.inverse_helmholtz_program(5))
+    again = rewrite.optimize(prog)
+    assert again.total_flops() == prog.total_flops()
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: random contraction-of-products programs
+# ---------------------------------------------------------------------------
+
+@st.composite
+def chain_program(draw):
+    """Random (M1 # M2 # x) . pairs program over small dims."""
+    p = draw(st.integers(2, 4))
+    n_mats = draw(st.integers(1, 3))
+    b = dsl.Builder()
+    x = b.input("x", (p,) * n_mats)
+    node = x
+    mats = []
+    for i in range(n_mats):
+        m = b.input(f"M{i}", (p, p))
+        mats.append(m)
+        node = ir.prod(m, node)
+    # contract each matrix's second axis with one x axis
+    pairs = []
+    for i in range(n_mats):
+        mat_col = 2 * i + 1
+        x_axis = 2 * n_mats + i
+        pairs.append((mat_col, x_axis))
+    out = ir.cont(node, pairs)
+    b.output("y", out)
+    return b.program(), p, n_mats
+
+
+@given(chain_program(), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_random_chain_factorization_semantics(prog_info, seed):
+    prog, p, n_mats = prog_info
+    opt = rewrite.optimize(prog)
+    assert opt.total_flops() <= prog.total_flops()
+    rng = np.random.default_rng(seed)
+    env = {"x": rng.uniform(-1, 1, (p,) * n_mats).astype(np.float64)}
+    for i in range(n_mats):
+        env[f"M{i}"] = rng.uniform(-1, 1, (p, p)).astype(np.float64)
+    a = emit.evaluate(prog, env, F32)["y"]
+    bb = emit.evaluate(opt, env, F32)["y"]
+    np.testing.assert_allclose(np.asarray(a), np.asarray(bb),
+                               rtol=1e-3, atol=1e-4)

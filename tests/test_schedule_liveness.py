@@ -1,0 +1,80 @@
+"""Operator scheduling (dataflow groups) + Mnemosyne-style liveness."""
+import pytest
+
+from repro.core import dsl, ir, liveness, rewrite, schedule
+
+
+def _helmholtz(p=7):
+    return rewrite.optimize(dsl.inverse_helmholtz_program(p))
+
+
+def test_default_schedule_is_seven_stages():
+    """The paper's 7-loop-nest structure: most aggressive partition keeps
+    7 singleton groups (3 GEMM + Hadamard + 3 GEMM)."""
+    sch = schedule.schedule(_helmholtz(), bytes_per_scalar=8)
+    assert len(sch.groups) == 7
+    assert all(len(g.nodes) == 1 for g in sch.groups)
+
+
+@pytest.mark.parametrize("target", [1, 2, 3])
+def test_max_groups_collapse(target):
+    """The paper's Dataflow 1/2/3-compute variants via max_groups."""
+    sch = schedule.schedule(
+        _helmholtz(), bytes_per_scalar=8, max_groups=target
+    )
+    assert len(sch.groups) <= max(target, 1) + 1
+
+
+def test_groups_topologically_ordered():
+    sch = schedule.schedule(_helmholtz(), bytes_per_scalar=8)
+    seen = set()
+    for g in sch.groups:
+        for n in g.nodes:
+            for op in n.operands():
+                if not isinstance(op, ir.Input):
+                    assert op.uid in seen or any(
+                        op.uid == m.uid for m in g.nodes
+                    )
+            seen.add(n.uid)
+
+
+def test_critical_flops_bounds_throughput():
+    sch = schedule.schedule(_helmholtz(11), bytes_per_scalar=8)
+    assert sch.critical_flops == max(g.flops for g in sch.groups)
+    # paper: each contraction stage costs 2p^4
+    assert sch.critical_flops == 2 * 11 ** 4
+
+
+def test_working_set_respects_budget():
+    budget = 10 ** 6
+    sch = schedule.schedule(
+        _helmholtz(11), vmem_budget=budget, bytes_per_scalar=8
+    )
+    for g in sch.groups:
+        assert g.working_set(8) <= budget
+
+
+def test_liveness_sharing_on_collapsed_group():
+    """Collapsed single group: the t/r intermediates have disjoint
+    lifetimes with later stages -> sharing saves memory (paper
+    'Mem Sharing' row: only applies to the 1-compute variant)."""
+    sch1 = schedule.schedule(
+        _helmholtz(11), bytes_per_scalar=8, max_groups=1
+    )
+    plans = liveness.plan_program(sch1.groups, 8)
+    total_savings = sum(p.naive_bytes - p.shared_bytes for p in plans.values())
+    assert total_savings > 0
+
+    # singleton groups: no internal temporaries -> nothing to share
+    # (matches the paper: sharing "cannot be applied" to 7-compute)
+    sch7 = schedule.schedule(_helmholtz(11), bytes_per_scalar=8)
+    plans7 = liveness.plan_program(sch7.groups, 8)
+    assert all(p.naive_bytes == 0 for p in plans7.values())
+
+
+def test_stream_bytes_accounting():
+    sch = schedule.schedule(_helmholtz(7), bytes_per_scalar=8)
+    for g in sch.groups[:-1]:
+        assert len(g.out_streams) >= 1
+    # last group streams the program output
+    assert sch.groups[-1].out_streams[0].shape == (7, 7, 7)

@@ -5,6 +5,8 @@
   fig16_precision  Fig. 16 / Table 4: precision x polynomial degree
   fig17_multicu    Fig. 17 / Table 5: CU replication (element-sharding)
   fig19_kernels    Fig. 19: Inverse Helmholtz / Interpolation / Gradient
+  memplan_ladder   Figs. 14-15: the same ladder driven by MemoryPlans
+                   (repro.memory), plus the machine's DSE winner
   lm_throughput    framework health: LM train/decode throughput (smoke)
 
 Prints ``name,us_per_call,derived`` CSV rows (derived = GFLOPS under the
@@ -25,7 +27,7 @@ sys.path.insert(0, "src")
 
 from repro.cfd import operators, reference  # noqa: E402
 from repro.cfd.simulation import SimConfig, run_simulation  # noqa: E402
-from repro.core.precision import POLICIES  # noqa: E402
+from repro.core.precision import POLICIES, enable_x64  # noqa: E402
 
 
 def _time(fn, *args, warmup=2, iters=5, **kw):
@@ -121,7 +123,7 @@ def fig16_precision() -> None:
             mse = float(np.mean((got - oracle) ** 2))
             _row(f"fig16/{pol_name}_p{p}", t * 1e6,
                  f"{flops / t / 1e9:.3f}GFLOPS;mse={mse:.2e}")
-        with jax.enable_x64(True):
+        with enable_x64(True):
             for pol_name in ("fixed32_q8.24", "fixed64_q24.40"):
                 pol = POLICIES[pol_name]
                 c = operators.build_inverse_helmholtz(
@@ -188,6 +190,63 @@ def fig19_kernels() -> None:
     _row("fig19/gradient", tg * 1e6, f"{fl_g / tg / 1e9:.3f}GFLOPS")
 
 
+def memplan_ladder() -> None:
+    """The paper's baseline -> double-buffer -> dataflow ladder, but every
+    rung generated from a MemoryPlan instead of hand-rolled driver knobs.
+    Rows report measured us/batch plus the plan's predicted us/batch; the
+    last row is the DSE winner for this machine."""
+    from repro.memory import channels as mchan, dse
+
+    target = mchan.detect_target()
+    E, n_b = 512, 8
+    n_eq = E * n_b
+    rungs = [
+        ("baseline", {"prefetch_depth": 0}),
+        ("double_buffer", {"prefetch_depth": 1}),
+        ("prefetch_4", {"prefetch_depth": 4}),
+        ("dataflow", {"prefetch_depth": 1, "backend": "staged"}),
+    ]
+    for name, kw in rungs:
+        plan = dse.make_plan(
+            11, target=target, batch_elements=E, n_eq=n_eq, **kw
+        )
+        cfg = SimConfig(
+            p=11, n_eq=n_eq, batch_elements=E,
+            backend=kw.get("backend", "xla"),
+            prefetch_depth=kw["prefetch_depth"],
+        )
+        run_simulation(cfg, plan=plan, max_batches=2)  # warm
+        # min over repetitions: robust against CPU frequency/cache drift
+        best = min(
+            (run_simulation(cfg, plan=plan, max_batches=n_b)
+             for _ in range(3)),
+            key=lambda r: r.wall_s,
+        )
+        flops = best.elements * reference.paper_flops_per_element(11)
+        _row(
+            f"memplan_ladder/{name}", best.wall_s / best.batches * 1e6,
+            f"{flops / best.wall_s / 1e9:.3f}GFLOPS;"
+            f"pred={plan.cost.t_pipelined * 1e6:.0f}us",
+        )
+    # "this machine's winner": only CU counts that exist here, and report
+    # the candidate that was actually measured (not just predicted)
+    space = dse.DesignSpace(cu_counts=(jax.device_count(),))
+    ranked = dse.explore(
+        11, target=target, n_eq=n_eq, space=space, measure_top=1
+    )
+    best = next((c for c in ranked if c.verified), ranked[0])
+    meas = best.measured_s_per_element
+    _row(
+        "memplan_ladder/dse_best",
+        (meas if meas is not None else best.predicted_s_per_element)
+        * best.plan.batch_elements * 1e6,
+        f"backend={best.plan.backend};E={best.plan.batch_elements};"
+        f"K={best.plan.prefetch_depth};CU={best.plan.cu_count};"
+        f"{'measured' if meas is not None else 'predicted-only'};"
+        f"pred={best.predicted_s_per_element * 1e6:.4f}us/elem",
+    )
+
+
 def lm_throughput() -> None:
     import repro.configs as configs
     from repro.models import build_model
@@ -231,6 +290,7 @@ BENCHES = {
     "fig16_precision": fig16_precision,
     "fig17_multicu": fig17_multicu,
     "fig19_kernels": fig19_kernels,
+    "memplan_ladder": memplan_ladder,
     "lm_throughput": lm_throughput,
 }
 

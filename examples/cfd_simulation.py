@@ -1,38 +1,53 @@
 """End-to-end CFD driver: the paper's 2M-element simulation, scaled by
---n-eq (default small enough for CPU).  Reports GFLOPS under the paper's
-Eq. (2)-(3) accounting, with double buffering and precision selectable --
-the knobs of the paper's evaluation.
+--n-eq (default small enough for CPU).  The memory architecture -- batch
+size E, prefetch depth, channel placement -- is resolved by the
+``repro.memory`` planner (pass --batch-elements to override E); use
+--show-plan to print the Fig.-14-style dump.  Reports GFLOPS under the
+paper's Eq. (2)-(3) accounting.
 
-Run:  PYTHONPATH=src python examples/cfd_simulation.py --n-eq 4096
+Run:  PYTHONPATH=src python examples/cfd_simulation.py --n-eq 4096 --show-plan
 """
 import argparse
 import sys
 
 sys.path.insert(0, "src")
 
+import jax  # noqa: E402
+
 from repro.cfd.simulation import (SimConfig, achieved_gflops,  # noqa: E402
-                                  run_simulation)
+                                  plan_config, run_simulation)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--p", type=int, default=11)
     ap.add_argument("--n-eq", type=int, default=4096)
-    ap.add_argument("--batch-elements", type=int, default=512)
+    ap.add_argument("--batch-elements", type=int, default=0,
+                    help="override E (0 = let the memory planner size it)")
+    ap.add_argument("--prefetch-depth", type=int, default=None,
+                    help="K batches staged ahead (default: double buffer)")
     ap.add_argument("--policy", default="float32")
     ap.add_argument("--no-double-buffer", action="store_true")
+    ap.add_argument("--show-plan", action="store_true",
+                    help="print the MemoryPlan report before running")
     args = ap.parse_args()
 
     cfg = SimConfig(
         p=args.p,
         n_eq=args.n_eq,
-        batch_elements=args.batch_elements,
+        batch_elements=args.batch_elements or None,
         policy=args.policy,
         double_buffer=not args.no_double_buffer,
+        prefetch_depth=args.prefetch_depth,
     )
+    plan = plan_config(cfg, cu_count=jax.device_count())
+    if args.show_plan:
+        print(plan.report())
+        print()
     print(f"simulating {cfg.n_eq:,} elements (p={cfg.p}) in "
-          f"{cfg.n_batches} batches of {cfg.batch_elements}")
-    res = run_simulation(cfg)
+          f"{cfg.n_eq // plan.batch_elements} batches of "
+          f"{plan.batch_elements} (prefetch K={plan.prefetch_depth})")
+    res = run_simulation(cfg, plan=plan)
     print(f"wall: {res.wall_s:.3f}s  checksum: {res.checksum:.4f}")
     print(f"GFLOPS (paper Eq.2 accounting): "
           f"{achieved_gflops(res, cfg.p):.3f}")

@@ -27,9 +27,14 @@ import re
 from typing import Dict, Optional
 
 # ---- TPU v5e target constants --------------------------------------------
-PEAK_FLOPS_BF16 = 197e12      # per chip
-HBM_BW = 819e9                # bytes/s per chip
-ICI_LINK_BW = 50e9            # bytes/s per link
+# Shared with the memory planner: repro.memory.channels.TPU_V5E is the
+# single source of truth, so roofline analysis and MemoryPlan costing can
+# never disagree on peak numbers.
+from ..memory.channels import TPU_V5E as _TPU_V5E
+
+PEAK_FLOPS_BF16 = _TPU_V5E.peak_flops   # per chip
+HBM_BW = _TPU_V5E.hbm_bw                # bytes/s per chip
+ICI_LINK_BW = _TPU_V5E.ici_bw           # bytes/s per link
 
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "f16": 2, "bf16": 2,

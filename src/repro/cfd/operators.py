@@ -4,7 +4,7 @@ equivalent of the Olympus "Optimize" step.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Sequence
 
 from ..core import api, dsl
 from ..core.emit import CompiledProgram
@@ -20,6 +20,7 @@ def build_inverse_helmholtz(
     optimize: bool = True,
     max_groups: Optional[int] = None,
     block_elements: int = 128,
+    donate_args: Sequence[str] = (),
 ) -> CompiledProgram:
     """Compile the Inverse Helmholtz operator (paper Fig. 2).
 
@@ -42,6 +43,7 @@ def build_inverse_helmholtz(
         backend=backend,
         max_groups=max_groups,
         pallas_impl=pallas_impl,
+        donate_args=donate_args,
     )
 
 

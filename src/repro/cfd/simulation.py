@@ -3,26 +3,33 @@
 Implements the paper's section 3.1 quantities on the TPU mesh:
 
   * **batch**: ``E`` elements processed per dispatch.  The paper sizes E
-    so a batch fills one 256 MB HBM pseudo-channel; here we size it so a
-    batch fills a target fraction of per-device HBM.
+    so a batch fills one 256 MB HBM pseudo-channel; here the sizing (and
+    every other memory decision) comes from an explicit
+    :class:`repro.memory.MemoryPlan` -- the driver holds no hardcoded
+    batch size.
   * **N_b = N_eq / E** batches, **I = N_b / N_cu** iterations, where the
     CU count is the number of mesh devices the element axis is sharded
     over (CU replication == data parallelism over elements).
-  * **double buffering**: batch k+1 is transferred host->device while
-    batch k computes (JAX async dispatch + explicit device_put staging --
-    the ping/pong channel pair of Fig. 14a).
+  * **transfer pipelining**: batch k+K..k+1 transfer host->device while
+    batch k computes, through the generic K-deep engine in
+    ``repro.memory.pipeline`` (K=1 is the ping/pong channel pair of
+    Fig. 14a; K=0 is the serial baseline).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, Iterator, Optional
+from typing import Dict, Iterator, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..memory import channels as memchannels
+from ..memory import dse as memdse
+from ..memory import pipeline as mempipe
+from ..memory.plan import MemoryPlan
 from .operators import build_inverse_helmholtz, flops_per_element
 
 
@@ -30,14 +37,28 @@ from .operators import build_inverse_helmholtz, flops_per_element
 class SimConfig:
     p: int = 11
     n_eq: int = 2_000_000          # paper: 2M elements simulated
-    batch_elements: int = 4096     # E
+    #: E -- None lets the MemoryPlan auto-size it from the channel model
+    batch_elements: Optional[int] = None
     policy: str = "float32"
     backend: str = "xla"
     double_buffer: bool = True
+    #: K batches staged ahead; None derives it from ``double_buffer``
+    prefetch_depth: Optional[int] = None
     seed: int = 0
 
     @property
+    def depth(self) -> int:
+        if self.prefetch_depth is not None:
+            return self.prefetch_depth
+        return 1 if self.double_buffer else 0
+
+    @property
     def n_batches(self) -> int:
+        if self.batch_elements is None:
+            raise ValueError(
+                "batch_elements unset -- resolve a MemoryPlan first "
+                "(simulation.plan_config) or set it explicitly"
+            )
         return self.n_eq // self.batch_elements
 
     def bytes_per_element(self, bytes_per_scalar: int = 4) -> int:
@@ -57,15 +78,39 @@ def element_mesh(devices=None) -> Mesh:
     return Mesh(np.array(devices), ("elements",))
 
 
-def _batch_generator(cfg: SimConfig) -> Iterator[Dict[str, np.ndarray]]:
+def plan_config(
+    cfg: SimConfig,
+    *,
+    target: Optional[memchannels.MemoryTarget] = None,
+    cu_count: int = 1,
+) -> MemoryPlan:
+    """Resolve the memory architecture for this simulation config.
+
+    Explicit ``cfg.batch_elements`` is honored; otherwise the planner
+    auto-sizes E against the target's pseudo-channel capacity.
+    """
+    return memdse.make_plan(
+        cfg.p,
+        target=target if target is not None else memchannels.detect_target(),
+        policy=cfg.policy,
+        backend=cfg.backend,
+        batch_elements=cfg.batch_elements,
+        prefetch_depth=cfg.depth,
+        cu_count=cu_count,
+        n_eq=cfg.n_eq,
+    )
+
+
+def _batch_generator(
+    p: int, batch_elements: int, n_batches: int, seed: int
+) -> Iterator[Dict[str, np.ndarray]]:
     """Deterministic, resumable synthetic element stream ([-1,1] data,
     matching the paper's range normalization)."""
-    p = cfg.p
-    for b in range(cfg.n_batches):
-        rng = np.random.default_rng(cfg.seed + b)
+    for b in range(n_batches):
+        rng = np.random.default_rng(seed + b)
         yield {
-            "D": rng.uniform(-1, 1, (cfg.batch_elements, p, p, p)).astype(np.float32),
-            "u": rng.uniform(-1, 1, (cfg.batch_elements, p, p, p)).astype(np.float32),
+            "D": rng.uniform(-1, 1, (batch_elements, p, p, p)).astype(np.float32),
+            "u": rng.uniform(-1, 1, (batch_elements, p, p, p)).astype(np.float32),
         }
 
 
@@ -75,6 +120,7 @@ class SimResult:
     elements: int
     wall_s: float
     checksum: float
+    plan: Optional[MemoryPlan] = None
 
     @property
     def gflops(self) -> float:
@@ -89,15 +135,26 @@ def run_simulation(
     mesh: Optional[Mesh] = None,
     max_batches: Optional[int] = None,
     S: Optional[np.ndarray] = None,
+    plan: Optional[MemoryPlan] = None,
 ) -> SimResult:
-    """Run the batched Inverse-Helmholtz simulation.
+    """Run the batched Inverse-Helmholtz simulation under a MemoryPlan.
 
+    The plan supplies E, the prefetch depth, and donation hints; pass one
+    explicitly (e.g. a DSE winner) or let ``plan_config`` derive it.
     Returns wall time and a checksum; GFLOPS is derived with the paper's
     op-count model by the caller (benchmarks/).
     """
     mesh = mesh or element_mesh()
+    if plan is None:
+        plan = plan_config(cfg, cu_count=int(mesh.devices.size))
+    E = plan.batch_elements
+    depth = plan.prefetch_depth
+
+    # donation is an accelerator-path optimization; the CPU runtime warns
+    # and ignores it, so only forward the hint off-host
+    donate = plan.donation if jax.default_backend() != "cpu" else ()
     compiled = build_inverse_helmholtz(
-        cfg.p, policy=cfg.policy, backend=cfg.backend
+        cfg.p, policy=cfg.policy, backend=cfg.backend, donate_args=donate
     )
     rng = np.random.default_rng(cfg.seed + 2 ** 31)
     if S is None:
@@ -107,35 +164,31 @@ def run_simulation(
     repl_sharding = NamedSharding(mesh, P())
     S_dev = jax.device_put(S, repl_sharding)
 
-    n = cfg.n_batches if max_batches is None else min(max_batches, cfg.n_batches)
-    gen = _batch_generator(cfg)
+    n_total = cfg.n_eq // E
+    n = n_total if max_batches is None else min(max_batches, n_total)
 
     def stage(batch):
         return {
             k: jax.device_put(v, elem_sharding) for k, v in batch.items()
         }
 
-    checksum = 0.0
+    def compute(staged):
+        return compiled.batched_fn({"S": S_dev, **staged})
+
     t0 = time.perf_counter()
-    pending = None
-    staged = stage(next(gen))
-    for b in range(n):
-        nxt = None
-        if cfg.double_buffer and b + 1 < n:
-            # ping/pong: enqueue next transfer before waiting on compute
-            nxt = stage(next(gen))
-        out = compiled.batched_fn({"S": S_dev, **staged})
-        if pending is not None:
-            checksum += float(pending)  # blocks on the *previous* batch
-        pending = jnp.sum(out["v"])
-        if nxt is None and b + 1 < n:
-            nxt = stage(next(gen))
-        staged = nxt
-    checksum += float(pending)
+    sums = mempipe.run_pipelined(
+        compute,
+        _batch_generator(cfg.p, E, n, cfg.seed),
+        stage_fn=stage,
+        depth=depth,
+        reduce_fn=lambda out: jnp.sum(out["v"]),
+    )
     wall = time.perf_counter() - t0
-    elements = n * cfg.batch_elements
+    checksum = 0.0
+    for s in sums:
+        checksum += float(s)
     return SimResult(
-        batches=n, elements=elements, wall_s=wall, checksum=checksum
+        batches=n, elements=n * E, wall_s=wall, checksum=checksum, plan=plan
     )
 
 

@@ -29,6 +29,7 @@ def compile_cfdlang(
     max_groups: Optional[int] = None,
     pallas_impl: Optional[Callable] = None,
     jit: bool = True,
+    donate_args: Sequence[str] = (),
 ) -> emit.CompiledProgram:
     """Parse, optimize, schedule, and compile a CFDlang program."""
     if isinstance(policy, str):
@@ -44,6 +45,7 @@ def compile_cfdlang(
         max_groups=max_groups,
         pallas_impl=pallas_impl,
         jit=jit,
+        donate_args=donate_args,
     )
 
 
@@ -57,6 +59,7 @@ def compile_ir(
     max_groups: Optional[int] = None,
     pallas_impl: Optional[Callable] = None,
     jit: bool = True,
+    donate_args: Sequence[str] = (),
 ) -> emit.CompiledProgram:
     if isinstance(policy, str):
         policy = POLICIES[policy]
@@ -70,4 +73,5 @@ def compile_ir(
         max_groups=max_groups,
         pallas_impl=pallas_impl,
         jit=jit,
+        donate_args=donate_args,
     )

@@ -158,6 +158,9 @@ class CompiledProgram:
     schedule: Optional[Schedule] = None
     stage_fns: Optional[List[Callable]] = None
     backend: str = "xla"
+    #: inputs whose device buffers XLA may reuse for outputs (a
+    #: MemoryPlan hint; the driver must not reuse them after a call)
+    donate_args: Tuple[str, ...] = ()
 
     def __call__(self, **env):
         return self.batched_fn(env)
@@ -170,9 +173,20 @@ def _element_callable(prog: ir.Program, policy) -> Callable:
     return fn
 
 
-def _batched_callable(prog: ir.Program, policy) -> Callable:
+def _batched_callable(
+    prog: ir.Program,
+    policy,
+    *,
+    donate_args: Sequence[str] = (),
+    jit: bool = True,
+) -> Callable:
+    """Batched callable; with ``jit`` the list-form function is jitted so
+    per-array donation hints (from a MemoryPlan) can be applied."""
     names = list(prog.inputs)
     elem = set(prog.element_vars)
+    unknown = [n for n in donate_args if n not in names]
+    if unknown:
+        raise ValueError(f"donate_args not program inputs: {unknown}")
 
     def list_fn(*arrays):
         env = dict(zip(names, arrays))
@@ -180,6 +194,9 @@ def _batched_callable(prog: ir.Program, policy) -> Callable:
 
     in_axes = tuple(0 if n in elem else None for n in names)
     vfn = jax.vmap(list_fn, in_axes=in_axes, out_axes=0)
+    if jit:
+        donate = tuple(i for i, n in enumerate(names) if n in donate_args)
+        vfn = jax.jit(vfn, donate_argnums=donate)
 
     def fn(env: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
         return vfn(*[env[n] for n in names])
@@ -244,12 +261,21 @@ def compile_program(
     max_groups: Optional[int] = None,
     pallas_impl: Optional[Callable] = None,
     jit: bool = True,
+    donate_args: Sequence[str] = (),
 ) -> CompiledProgram:
     """Compile an IR program to an executable (the Olympus entry point).
 
     ``pallas_impl``: a callable ``(env) -> outputs`` implementing the whole
     batched program as a fused kernel; used when ``backend='pallas'``.
+
+    ``donate_args``: input names whose buffers XLA may alias for outputs
+    (a ``repro.memory`` MemoryPlan hint; ``xla`` backend only).
     """
+    if donate_args and (backend != "xla" or not jit):
+        raise ValueError(
+            "donate_args requires the jitted 'xla' backend "
+            f"(got backend={backend!r}, jit={jit})"
+        )
     sched = None
     if backend in ("staged",) or vmem_budget is not None or max_groups is not None:
         kwargs = {}
@@ -293,9 +319,9 @@ def compile_program(
 
     # default: xla
     element = _element_callable(prog, policy)
-    batched = _batched_callable(prog, policy)
+    batched = _batched_callable(prog, policy, donate_args=donate_args, jit=jit)
     return CompiledProgram(
         program=prog, policy=policy, element_fn=element,
-        batched_fn=jax.jit(batched) if jit else batched,
-        schedule=sched, backend="xla",
+        batched_fn=batched, schedule=sched, backend="xla",
+        donate_args=tuple(donate_args),
     )

@@ -21,6 +21,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+try:  # newer jax exposes the x64 context manager at top level
+    enable_x64 = jax.enable_x64
+except AttributeError:
+    from jax.experimental import enable_x64
+
 
 @dataclasses.dataclass(frozen=True)
 class FloatPolicy:

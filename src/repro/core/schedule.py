@@ -55,6 +55,14 @@ class Group:
                 total += n.size * bytes_per_scalar
         return total
 
+    def in_stream_bytes(self, bytes_per_scalar: int = 4) -> int:
+        """Bytes flowing into this group per element (HBM reads)."""
+        return sum(n.size for n in self.in_streams) * bytes_per_scalar
+
+    def out_stream_bytes(self, bytes_per_scalar: int = 4) -> int:
+        """Bytes this group materializes per element (HBM writes)."""
+        return sum(n.size for n in self.out_streams) * bytes_per_scalar
+
 
 @dataclasses.dataclass
 class Schedule:
@@ -66,22 +74,37 @@ class Schedule:
         """The longest group bounds pipeline throughput (paper 3.4.3)."""
         return max(g.flops for g in self.groups) if self.groups else 0
 
-    @property
-    def stream_bytes(self) -> Dict[str, int]:
-        """Bytes crossing group boundaries (the HBM round-trip cost)."""
-        out = {}
-        for g in self.groups:
-            out[g.name] = sum(n.size for n in g.out_streams)
-        return out
+    def stream_bytes(self, bytes_per_scalar: int = 4) -> Dict[str, int]:
+        """Bytes each group materializes across its boundary, per element
+        (the HBM round-trip cost the memory planner prices)."""
+        return {
+            g.name: g.out_stream_bytes(bytes_per_scalar) for g in self.groups
+        }
+
+    def stream_io_bytes(
+        self, bytes_per_scalar: int = 4
+    ) -> Dict[str, Tuple[int, int]]:
+        """Per-group (in, out) stream bytes per element -- the planner's
+        view of every dataflow edge (paper Fig. 14's FIFO widths)."""
+        return {
+            g.name: (
+                g.in_stream_bytes(bytes_per_scalar),
+                g.out_stream_bytes(bytes_per_scalar),
+            )
+            for g in self.groups
+        }
 
     def summary(self, bytes_per_scalar: int = 4) -> str:
         lines = [
-            f"{'group':<12} {'nodes':>5} {'flops':>12} {'ws_bytes':>10} {'streams':>8}"
+            f"{'group':<12} {'nodes':>5} {'flops':>12} {'ws_bytes':>10} "
+            f"{'in_B':>8} {'out_B':>8}"
         ]
         for g in self.groups:
             lines.append(
                 f"{g.name:<12} {len(g.nodes):>5} {g.flops:>12} "
-                f"{g.working_set(bytes_per_scalar):>10} {len(g.out_streams):>8}"
+                f"{g.working_set(bytes_per_scalar):>10} "
+                f"{g.in_stream_bytes(bytes_per_scalar):>8} "
+                f"{g.out_stream_bytes(bytes_per_scalar):>8}"
             )
         return "\n".join(lines)
 

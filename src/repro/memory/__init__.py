@@ -1,0 +1,25 @@
+"""Automatic memory-architecture planning (the paper's core contribution).
+
+Turns a compiled tensor program + schedule into an explicit
+:class:`~repro.memory.plan.MemoryPlan`: which pseudo-channel each stream
+lives in, how big a batch (E) is, how deep the prefetch pipeline runs,
+and what it is predicted to cost -- then explores that design space
+CHARM-style and verifies the winners by measurement.
+
+  channels  -- per-target memory datasheets (shared with analysis.roofline)
+  layout    -- stream->buffer assignment, packing, auto batch sizing
+  pipeline  -- generic K-deep prefetch/double-buffer transfer engine
+  dse       -- design-space explorer + analytic cost model
+  plan      -- the MemoryPlan dataclasses and the Fig.-14-style report
+"""
+from . import channels, dse, layout, pipeline, plan
+from .channels import ALVEO_U280, CPU_HOST, TPU_V5E, MemoryTarget, detect_target
+from .dse import Candidate, DesignSpace, explore, make_plan, pareto_front
+from .plan import BufferSpec, CostBreakdown, MemoryPlan
+
+__all__ = [
+    "channels", "dse", "layout", "pipeline", "plan",
+    "MemoryTarget", "ALVEO_U280", "TPU_V5E", "CPU_HOST", "detect_target",
+    "Candidate", "DesignSpace", "explore", "make_plan", "pareto_front",
+    "BufferSpec", "CostBreakdown", "MemoryPlan",
+]

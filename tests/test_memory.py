@@ -1,0 +1,292 @@
+"""repro.memory: planner determinism, paper batch sizing, DSE cost-model
+monotonicity, and end-to-end prefetch-pipeline equivalence."""
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.cfd import operators, simulation
+from repro.cfd.simulation import SimConfig
+from repro.core import dsl, emit, rewrite, schedule
+from repro.memory import channels, dse, layout
+from repro.memory import pipeline as mempipe
+
+
+def _helmholtz_prog(p):
+    return rewrite.optimize(
+        dsl.parse(
+            dsl.INVERSE_HELMHOLTZ_SRC.format(p=p),
+            element_vars=("u", "D", "v"),
+        )
+    )
+
+
+# ---------------------------------------------------------------------------
+# plan construction
+# ---------------------------------------------------------------------------
+
+
+def test_plan_determinism():
+    """Same inputs -> identical plan (buffers, channels, cost, report)."""
+    a = dse.make_plan(11, target=channels.ALVEO_U280)
+    b = dse.make_plan(11, target=channels.ALVEO_U280)
+    assert a == b
+    assert a.report() == b.report()
+
+
+def test_auto_batch_matches_paper_channel_sizing():
+    """The planner's E equals SimConfig.batch_for_channel for the paper's
+    256 MB pseudo-channel (Alveo U280: 8 GiB HBM2 / 32 channels)."""
+    t = channels.ALVEO_U280
+    assert t.channel_bytes == 256 * 2 ** 20
+    for p in (7, 11):
+        plan = dse.make_plan(p, target=t, policy="float32")
+        assert plan.batch_elements == SimConfig.batch_for_channel(
+            p, t.channel_bytes, 4
+        )
+
+
+def test_auto_batch_capped_by_problem_size():
+    plan = dse.make_plan(11, target=channels.ALVEO_U280, n_eq=1000)
+    assert plan.batch_elements == 1000
+
+
+def test_plan_buffers_and_channels():
+    plan = dse.make_plan(11, target=channels.ALVEO_U280, prefetch_depth=1)
+    roles = {b.name: b.role for b in plan.buffers}
+    assert roles == {"D": "in", "u": "in", "v": "out", "S": "shared"}
+    ins = [b for b in plan.buffers if b.role == "in"]
+    # K=1 prefetch: ping/pong pair + the retiring batch JAX frees only
+    # after its async compute completes = 3 resident replicas
+    assert all(b.replicas == 3 for b in ins)
+    serial = dse.make_plan(
+        11, target=channels.ALVEO_U280, prefetch_depth=0
+    )
+    assert all(
+        b.replicas == 1 for b in serial.buffers if b.role == "in"
+    )
+    # burst packing: padded to the 64 B AXI quantum, never smaller
+    for b in plan.buffers:
+        assert b.padded_bytes >= b.element_bytes
+        assert b.padded_bytes % channels.ALVEO_U280.burst_bytes == 0
+    assert 0 < plan.channels_used <= channels.ALVEO_U280.n_channels
+    assert plan.feasible
+
+
+def test_staged_plan_has_intermediate_buffers():
+    plan = dse.make_plan(11, target=channels.ALVEO_U280, backend="staged")
+    inters = [b for b in plan.buffers if b.role == "inter"]
+    assert inters, "staged backend must expose group-boundary streams"
+    # intermediates cross HBM twice (write + read back)
+    assert plan.hbm_stream_bytes > plan.host_stream_bytes
+
+
+def test_infeasible_plan_reported_not_raised():
+    tiny = channels.ALVEO_U280.with_(hbm_bytes=2 ** 20, n_channels=4)
+    plan = dse.make_plan(11, target=tiny, batch_elements=4096)
+    assert not plan.feasible
+    assert "exceeds" in plan.infeasible_reason
+    assert "NO" in plan.report()
+
+
+# ---------------------------------------------------------------------------
+# DSE cost model
+# ---------------------------------------------------------------------------
+
+
+def test_cost_monotone_in_bandwidth():
+    """More bandwidth must never predict a slower plan."""
+    base_t = channels.ALVEO_U280
+    points = [
+        dict(backend="xla", prefetch_depth=0),
+        dict(backend="xla", prefetch_depth=1),
+        dict(backend="xla", prefetch_depth=4, cu_count=4),
+        dict(backend="staged", prefetch_depth=1),
+        dict(backend="staged", prefetch_depth=2, policy="bfloat16"),
+    ]
+    for kw in points:
+        prev = dse.make_plan(11, target=base_t, n_eq=1 << 16, **kw)
+        for scale in (2.0, 4.0, 16.0):
+            t = base_t.with_(
+                hbm_bw=base_t.hbm_bw * scale,
+                host_link_bw=base_t.host_link_bw * scale,
+            )
+            cur = dse.make_plan(11, target=t, n_eq=1 << 16, **kw)
+            assert cur.cost.t_pipelined <= prev.cost.t_pipelined * (1 + 1e-12)
+            assert cur.cost.t_serial <= prev.cost.t_serial * (1 + 1e-12)
+            prev = cur
+
+
+def test_cost_overlap_never_slower_than_serial():
+    for depth in (1, 2, 4):
+        plan = dse.make_plan(
+            11, target=channels.ALVEO_U280, prefetch_depth=depth,
+            n_eq=1 << 20,
+        )
+        assert plan.cost.t_pipelined <= plan.cost.t_serial * (1 + 1e-12)
+        assert plan.cost.overlap_speedup >= 1.0 - 1e-12
+
+
+def test_explore_returns_ranked_set():
+    cands = dse.explore(11, target=channels.ALVEO_U280, n_eq=1 << 16)
+    assert len(cands) > 20
+    feas = [c for c in cands if c.plan.feasible]
+    assert feas, "the paper's operating point must be feasible"
+    # ranked: feasible first, then by predicted time per element
+    pred = [c.predicted_s_per_element for c in feas]
+    assert pred == sorted(pred)
+    assert all(c.plan.feasible for c in cands[: len(feas)])
+    front = dse.pareto_front(cands)
+    assert front
+    assert all(c.plan.feasible for c in front)
+    assert set(id(c) for c in front) <= set(id(c) for c in cands)
+
+
+def test_explore_measures_top_candidate():
+    space = dse.DesignSpace(
+        backends=("xla",), policies=("float32",), batch_divisors=(1,),
+        prefetch_depths=(0, 1), cu_counts=(1,),
+    )
+    cands = dse.explore(
+        5, target=channels.CPU_HOST, n_eq=256, space=space, measure_top=1,
+        measure_batches=2,
+    )
+    assert any(c.verified for c in cands)
+    best = next(c for c in cands if c.verified)
+    assert best.measured_s_per_element > 0
+
+
+# ---------------------------------------------------------------------------
+# transfer pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_prefetch_depth_semantics():
+    staged_log = []
+    consumed = []
+
+    def stage(x):
+        staged_log.append(x)
+        return x
+
+    for x in mempipe.prefetch(range(5), stage, depth=2):
+        # when item k is consumed, items up to k+2 are already staged
+        consumed.append(x)
+        assert len(staged_log) >= min(5, len(consumed) + 2)
+    assert consumed == list(range(5))
+    with pytest.raises(ValueError):
+        list(mempipe.prefetch(range(3), stage, depth=-1))
+
+
+def test_pipelined_run_bitwise_matches_serial(rng):
+    """K-deep prefetch + deferred sync must be bit-identical to the
+    serial baseline (paper Fig. 14a: ping/pong changes nothing)."""
+    p, E = 5, 16
+    c = operators.build_inverse_helmholtz(p)
+    S = rng.uniform(-1, 1, (p, p)).astype(np.float32)
+    batches = [
+        {
+            "D": rng.uniform(-1, 1, (E, p, p, p)).astype(np.float32),
+            "u": rng.uniform(-1, 1, (E, p, p, p)).astype(np.float32),
+        }
+        for _ in range(4)
+    ]
+
+    def compute(staged):
+        return c.batched_fn({"S": S, **staged})["v"]
+
+    stage = lambda b: {k: jax.device_put(v) for k, v in b.items()}
+    serial = mempipe.run_pipelined(
+        compute, batches, stage_fn=stage, depth=0
+    )
+    deep = mempipe.run_pipelined(
+        compute, batches, stage_fn=stage, depth=2
+    )
+    assert len(serial) == len(deep) == 4
+    for a, b in zip(serial, deep):
+        assert a.dtype == b.dtype
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_simulation_driver_plan_resolves_batch():
+    """No hardcoded E: the planner sizes the batch from the channel model."""
+    cfg = SimConfig(p=5, n_eq=512)  # batch_elements unset
+    res = simulation.run_simulation(cfg, max_batches=2)
+    assert res.plan is not None
+    assert res.plan.batch_elements >= 1
+    assert res.elements == res.batches * res.plan.batch_elements
+    assert np.isfinite(res.checksum)
+    with pytest.raises(ValueError):
+        cfg.n_batches  # unresolved config cannot count batches
+
+
+def test_simulation_checksum_invariant_to_prefetch_depth():
+    res = {}
+    for depth in (0, 1, 3):
+        cfg = SimConfig(
+            p=5, n_eq=256, batch_elements=64, prefetch_depth=depth
+        )
+        res[depth] = simulation.run_simulation(cfg, max_batches=4).checksum
+    assert res[0] == pytest.approx(res[1], abs=1e-6)
+    assert res[0] == pytest.approx(res[3], abs=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# wiring: schedule stream bytes, emit donation, roofline constants
+# ---------------------------------------------------------------------------
+
+
+def test_schedule_exposes_stream_bytes():
+    sch = schedule.schedule(_helmholtz_prog(7), bytes_per_scalar=4)
+    io = sch.stream_io_bytes(4)
+    assert set(io) == {g.name for g in sch.groups}
+    for g in sch.groups:
+        ins, outs = io[g.name]
+        assert ins == g.in_stream_bytes(4) > 0
+        assert outs == g.out_stream_bytes(4) > 0
+    # the last group streams the program output: p^3 scalars
+    assert sch.groups[-1].out_stream_bytes(4) >= 7 ** 3 * 4
+    assert sch.stream_bytes(4)[sch.groups[-1].name] >= 7 ** 3 * 4
+
+
+def test_emit_accepts_donation_hints(rng):
+    p, E = 5, 8
+    prog = _helmholtz_prog(p)
+    plain = emit.compile_program(prog)
+    with warnings.catch_warnings():
+        # CPU backends may ignore donation with a warning; the hint must
+        # never change results
+        warnings.simplefilter("ignore")
+        donated = emit.compile_program(prog, donate_args=("D", "u"))
+        assert donated.donate_args == ("D", "u")
+        S = rng.uniform(-1, 1, (p, p)).astype(np.float32)
+        env = {
+            "S": S,
+            "D": rng.uniform(-1, 1, (E, p, p, p)).astype(np.float32),
+            "u": rng.uniform(-1, 1, (E, p, p, p)).astype(np.float32),
+        }
+        want = np.asarray(plain.batched_fn(dict(env))["v"])
+        got = np.asarray(
+            donated.batched_fn(
+                {k: jax.device_put(v) for k, v in env.items()}
+            )["v"]
+        )
+    assert np.array_equal(want, got)
+    with pytest.raises(ValueError):
+        emit.compile_program(prog, donate_args=("nope",))
+
+
+def test_roofline_shares_channel_constants():
+    from repro.analysis import roofline
+
+    assert roofline.PEAK_FLOPS_BF16 == channels.TPU_V5E.peak_flops
+    assert roofline.HBM_BW == channels.TPU_V5E.hbm_bw
+    assert roofline.ICI_LINK_BW == channels.TPU_V5E.ici_bw
+
+
+def test_layout_stream_bytes_match_simconfig_model():
+    prog = _helmholtz_prog(11)
+    assert layout.stream_bytes_per_element(prog, 4) == SimConfig(
+        p=11
+    ).bytes_per_element(4)

@@ -3,10 +3,13 @@ MSE claims (ap_fixed<64,24> ~ 9.39e-22, ap_fixed<32,8> ~ 3.58e-12)."""
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import dsl, emit, rewrite
-from repro.core.precision import FIXED32, FIXED64, FixedPointPolicy
+from repro.core.precision import (FIXED32, FIXED64, FixedPointPolicy,
+                                  enable_x64)
 
 
 def test_formats():
@@ -19,7 +22,7 @@ def test_formats():
 
 
 def test_encode_decode_roundtrip():
-    with jax.enable_x64(True):
+    with enable_x64(True):
         x = np.linspace(-0.99, 0.99, 101)
         for pol in (FIXED32, FIXED64):
             err = np.abs(np.asarray(pol.decode(pol.encode(x))) - x).max()
@@ -29,7 +32,7 @@ def test_encode_decode_roundtrip():
 @given(st.floats(-1, 1), st.floats(-1, 1))
 @settings(max_examples=50, deadline=None)
 def test_fmul_within_ulp(a, b):
-    with jax.enable_x64(True):
+    with enable_x64(True):
         for pol, tol in ((FIXED32, 2 ** -22), (FIXED64, 2 ** -38)):
             qa, qb = pol.encode(np.float64(a)), pol.encode(np.float64(b))
             got = float(pol.decode(pol.fmul(qa, qb)))
@@ -39,7 +42,7 @@ def test_fmul_within_ulp(a, b):
 def test_fixed64_large_magnitude():
     """Q24.40 must handle the paper's 24 integer bits (values up to
     ~2^23): products of large x small stay accurate."""
-    with jax.enable_x64(True):
+    with enable_x64(True):
         a, b = 3000.5, 0.125
         qa, qb = FIXED64.encode(np.float64(a)), FIXED64.encode(np.float64(b))
         got = float(FIXED64.decode(FIXED64.fmul(qa, qb)))
@@ -60,7 +63,7 @@ def test_helmholtz_mse_matches_paper_order(pol, paper_mse, slack, rng):
     u = rng.uniform(-1, 1, (p, p, p))
     t = np.einsum("il,jm,kn,lmn->ijk", S, S, S, u)
     v = np.einsum("li,mj,nk,lmn->ijk", S, S, S, D * t)
-    with jax.enable_x64(True):
+    with enable_x64(True):
         c = emit.compile_program(prog, policy=pol, jit=False)
         env = {k: pol.encode(val) for k, val in
                {"S": S, "D": D, "u": u}.items()}
@@ -73,7 +76,7 @@ def test_helmholtz_mse_matches_paper_order(pol, paper_mse, slack, rng):
 def test_fixed_point_requires_factorized_program():
     prog = dsl.inverse_helmholtz_program(3)  # literal: 4-ary einsum
     flat = rewrite.flatten_products(prog)
-    with jax.enable_x64(True):
+    with enable_x64(True):
         c = emit.compile_program(flat, policy=FIXED32, jit=False)
         env = {
             k: FIXED32.encode(np.zeros(v.shape))

@@ -6,7 +6,9 @@ equal cost.
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import dsl, emit, ir, rewrite
 from repro.core.precision import F32

@@ -7,7 +7,7 @@ import numpy as np
 from repro import configs
 from repro.cfd import reference
 from repro.core import api
-from repro.core.precision import FIXED32
+from repro.core.precision import FIXED32, enable_x64
 from repro.models import build_model
 from repro.optim import AdamWConfig
 from repro.runtime.train import init_train_state, make_train_step
@@ -45,7 +45,7 @@ def test_dsl_to_executable_end_to_end(rng):
 def test_fixed_point_flow_end_to_end(rng):
     """DSL -> fixed-point executable (the paper's precision knob)."""
     p = 5
-    with jax.enable_x64(True):
+    with enable_x64(True):
         compiled = api.compile_cfdlang(
             api.dsl.INVERSE_HELMHOLTZ_SRC.format(p=p),
             element_vars=("u", "D", "v"), policy=FIXED32, jit=False,

@@ -7,6 +7,11 @@
   fig19_kernels    Fig. 19: Inverse Helmholtz / Interpolation / Gradient
   memplan_ladder   Figs. 14-15: the same ladder driven by MemoryPlans
                    (repro.memory), plus the machine's DSE winner
+  chain_ladder     Sec. 5: the composed interpolation -> gradient ->
+                   inverse-Helmholtz application planned as one
+                   ProgramChain (inter-stage streams HBM-resident) vs
+                   the unchained host-round-trip baseline; also writes
+                   chain_ladder.json (CI uploads it as an artifact)
   lm_throughput    framework health: LM train/decode throughput (smoke)
 
 Prints ``name,us_per_call,derived`` CSV rows (derived = GFLOPS under the
@@ -247,6 +252,119 @@ def memplan_ladder() -> None:
     )
 
 
+def chain_ladder() -> None:
+    """The full CFD application as one ProgramChain.  Rungs compare the
+    unchained baseline (every stage streams through the host, as three
+    standalone plans would) against the chain plan's HBM-resident
+    execution, serial and prefetched.  Results also land in
+    ``chain_ladder.json`` (override the path with $CHAIN_LADDER_JSON)."""
+    import json
+    import os
+
+    from repro.cfd.simulation import run_chain
+    from repro.memory import chain as mchain
+    from repro.memory import channels as mchan, dse
+
+    p, E, n_b = 7, 256, 6
+    n_eq = E * n_b
+    target = mchan.detect_target()
+    chain = operators.build_cfd_chain(p)
+    flops_pe = sum(s.program.total_flops() for s in chain.stages)
+    rng = np.random.default_rng(7)
+    inputs = {
+        "interp.u": rng.uniform(-1, 1, (n_eq, p, p, p)).astype(np.float32),
+        "helmholtz.D": rng.uniform(-1, 1, (n_eq, p, p, p)).astype(np.float32),
+    }
+    shared = {
+        name: rng.uniform(-1, 1, node.shape).astype(np.float32)
+        for name, node in sorted(chain.shared_operands().items())
+    }
+    rows = []
+
+    def emit(name, us_per_batch, gflops, extra=""):
+        _row(f"chain_ladder/{name}", us_per_batch,
+             f"{gflops:.3f}GFLOPS{';' + extra if extra else ''}")
+        rows.append({
+            "name": name, "us_per_batch": us_per_batch,
+            "gflops": gflops, "extra": extra,
+        })
+
+    # unchained baseline: each stage a separate dispatch with a host
+    # round-trip between (what three standalone MemoryPlans execute)
+    interp, grad, helm = (s.compiled for s in chain.stages)
+
+    def unchained_batch(b):
+        sl = slice(b * E, (b + 1) * E)
+        v = np.asarray(interp.batched_fn(
+            {"A": shared["A"], "u": inputs["interp.u"][sl]})["v"])
+        g = grad.batched_fn({
+            "Dx": shared["Dx"], "Dy": shared["Dy"], "Dz": shared["Dz"],
+            "u": np.asarray(v),
+        })
+        gx = np.asarray(g["gx"])
+        out = helm.batched_fn({
+            "S": shared["S"], "D": inputs["helmholtz.D"][sl], "u": gx,
+        })
+        return float(jnp.sum(out["v"]))
+
+    unchained_batch(0)  # warm compile
+    t0 = time.perf_counter()
+    for b in range(n_b):
+        unchained_batch(b)
+    t_unchained = (time.perf_counter() - t0) / n_b
+    emit("unchained_host_roundtrip", t_unchained * 1e6,
+         E * flops_pe / t_unchained / 1e9)
+
+    for name, depth in (("chained_serial", 0), ("chained_double_buffer", 1),
+                        ("chained_prefetch_2", 2)):
+        plan = mchain.plan_chain(
+            chain, target=target, batch_elements=E,
+            prefetch_depth=depth, n_eq=n_eq,
+        )
+        run_chain(chain, plan, inputs=inputs, shared=shared,
+                  max_batches=2)  # warm
+        best = min(
+            (run_chain(chain, plan, inputs=inputs, shared=shared,
+                       n_eq=n_eq, max_batches=n_b) for _ in range(3)),
+            key=lambda r: r.wall_s,
+        )
+        emit(name, best.wall_s / best.batches * 1e6,
+             best.elements * flops_pe / best.wall_s / 1e9,
+             f"pred={plan.cost.t_pipelined * 1e6:.0f}us")
+
+    # the residency claim, in bytes: chain host streams vs the sum of
+    # three standalone plans at the same E
+    plan = mchain.plan_chain(
+        chain, target=target, batch_elements=E, prefetch_depth=1,
+        n_eq=n_eq,
+    )
+    standalone = sum(
+        dse.make_plan(
+            s.program, target=target, batch_elements=E,
+            operator_name=s.name,
+        ).host_stream_bytes
+        for s in chain.stages
+    )
+    # not a timing row: keep the us_per_call column honest (0.0) and put
+    # the byte accounting in the derived field + the JSON artifact
+    _row("chain_ladder/host_stream_residency", 0.0,
+         f"chain_bytes_per_batch={plan.host_stream_bytes};"
+         f"standalone_sum={standalone};"
+         f"saved={1 - plan.host_stream_bytes / standalone:.1%}")
+
+    path = os.environ.get("CHAIN_LADDER_JSON", "chain_ladder.json")
+    with open(path, "w") as f:
+        json.dump({
+            "p": p, "E": E, "n_batches": n_b,
+            "target": target.name,
+            "rows": rows,
+            "host_stream_bytes": {
+                "chain": plan.host_stream_bytes,
+                "standalone_sum": standalone,
+            },
+        }, f, indent=2)
+
+
 def lm_throughput() -> None:
     import repro.configs as configs
     from repro.models import build_model
@@ -291,6 +409,7 @@ BENCHES = {
     "fig17_multicu": fig17_multicu,
     "fig19_kernels": fig19_kernels,
     "memplan_ladder": memplan_ladder,
+    "chain_ladder": chain_ladder,
     "lm_throughput": lm_throughput,
 }
 

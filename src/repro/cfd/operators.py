@@ -1,15 +1,41 @@
 """The paper's three CFD operators, built through the DSL-to-executable
 flow (core.api), with selectable backend/precision -- the per-kernel
-equivalent of the Olympus "Optimize" step.
+equivalent of the Olympus "Optimize" step -- plus the composed
+interpolation -> gradient -> inverse-Helmholtz ProgramChain the chain
+planner (repro.memory.chain) sizes as one application.
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence
+from typing import Optional, Sequence, Tuple, Union
 
 from ..core import api, dsl
 from ..core.emit import CompiledProgram
 from ..core.precision import POLICIES
 from ..kernels.helmholtz import ops as helmholtz_ops
+from ..memory.chain import ChainPlan, ProgramChain
+from ..memory.plan import MemoryPlan
+
+
+def pallas_block_elements(
+    p: int,
+    plan: Optional[MemoryPlan] = None,
+    *,
+    vmem_bytes: Optional[int] = None,
+    bytes_per_scalar: int = 4,
+) -> int:
+    """Resolve the Pallas kernel's block size from a MemoryPlan.
+
+    The plan already carries the VMEM-budgeted block (``block_elements``,
+    a divisor of its E); without one, the block is derived directly from
+    the given VMEM capacity, and with neither the kernel default stands.
+    """
+    if plan is not None and plan.block_elements:
+        return plan.block_elements
+    if vmem_bytes is not None:
+        return helmholtz_ops.block_elements_for_vmem(
+            p, vmem_bytes, bytes_per_scalar=bytes_per_scalar
+        )
+    return helmholtz_ops.DEFAULT_BLOCK_ELEMENTS
 
 
 def build_inverse_helmholtz(
@@ -19,7 +45,8 @@ def build_inverse_helmholtz(
     backend: str = "xla",
     optimize: bool = True,
     max_groups: Optional[int] = None,
-    block_elements: int = 128,
+    block_elements: Optional[int] = None,
+    plan: Optional[MemoryPlan] = None,
     donate_args: Sequence[str] = (),
 ) -> CompiledProgram:
     """Compile the Inverse Helmholtz operator (paper Fig. 2).
@@ -28,13 +55,17 @@ def build_inverse_helmholtz(
       * ``xla``    -- factorized einsum chain, one jitted program.
       * ``staged`` -- one jitted stage per scheduled group (dataflow view).
       * ``pallas`` -- the fused TPU kernel (kernels/helmholtz); on CPU use
-        kernel tests' interpret mode instead.
+        kernel tests' interpret mode instead.  Its ``block_elements``
+        defaults to the plan's VMEM-budgeted block when a MemoryPlan is
+        given (explicit ``block_elements`` still wins).
     """
     pallas_impl = None
     if backend == "pallas":
-        pallas_impl = helmholtz_ops.make_pallas_impl(
-            block_elements=block_elements
+        be = (
+            block_elements if block_elements is not None
+            else pallas_block_elements(p, plan)
         )
+        pallas_impl = helmholtz_ops.make_pallas_impl(block_elements=be)
     return api.compile_cfdlang(
         dsl.INVERSE_HELMHOLTZ_SRC.format(p=p),
         element_vars=("u", "D", "v"),
@@ -84,6 +115,63 @@ def build_gradient(
         backend=backend,
         max_groups=max_groups,
     )
+
+
+def chain_stage_block_elements(
+    chain_plan: Optional[ChainPlan], stage: str
+) -> Optional[int]:
+    """The VMEM-budgeted block a ChainPlan assigned to one stage (None
+    when no plan, or the plan does not know the stage)."""
+    if chain_plan is None:
+        return None
+    for sp in chain_plan.stages:
+        if sp.name == stage and sp.block_elements:
+            return sp.block_elements
+    return None
+
+
+def build_cfd_chain(
+    p: int = 11,
+    *,
+    policy="float32",
+    backends: Union[str, Tuple[str, str, str]] = "xla",
+    helmholtz_plan: Optional[MemoryPlan] = None,
+    chain_plan: Optional[ChainPlan] = None,
+) -> ProgramChain:
+    """The paper's full application as one ProgramChain:
+
+        interpolation -> gradient -> inverse Helmholtz
+
+    All stages share the element extent ``p`` so the streams line up:
+    interpolation's ``v`` feeds the gradient's ``u``, and the gradient's
+    ``gx`` feeds the Helmholtz ``u`` (``gy``/``gz`` stream back to the
+    host alongside the Helmholtz ``v``).  The chain planner keeps both
+    bound streams resident in HBM -- no host round-trip between stages.
+
+    For a Pallas Helmholtz stage, pass the ChainPlan back in as
+    ``chain_plan`` so the kernel's block size comes from the plan's
+    per-stage VMEM budget (plan first against a plan-only chain, then
+    rebuild the executable chain with the plan):
+
+        ch = build_cfd_chain(p)                       # plan-only (xla)
+        plan = chain.plan_chain(ch, backends=("xla", "xla", "pallas"))
+        ch = build_cfd_chain(p, backends=("xla", "xla", "pallas"),
+                             chain_plan=plan)
+        simulation.run_chain(ch, plan)
+    """
+    if isinstance(backends, str):
+        backends = (backends, backends, backends)
+    interp = build_interpolation(n=p, m=p, policy=policy, backend=backends[0])
+    grad = build_gradient(nx=p, ny=p, nz=p, policy=policy, backend=backends[1])
+    helm = build_inverse_helmholtz(
+        p, policy=policy, backend=backends[2], plan=helmholtz_plan,
+        block_elements=chain_stage_block_elements(chain_plan, "helmholtz"),
+    )
+    return ProgramChain([
+        ("interp", interp),
+        ("grad", grad, {"u": "interp.v"}),
+        ("helmholtz", helm, {"u": "grad.gx"}),
+    ])
 
 
 def flops_per_element(p: int) -> int:

@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Dict, Iterator, Optional
 
 import jax
@@ -26,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..memory import chain as memchain
 from ..memory import channels as memchannels
 from ..memory import dse as memdse
 from ..memory import pipeline as mempipe
@@ -151,10 +153,12 @@ def run_simulation(
     depth = plan.prefetch_depth
 
     # donation is an accelerator-path optimization; the CPU runtime warns
-    # and ignores it, so only forward the hint off-host
+    # and ignores it, so only forward the hint off-host.  The plan also
+    # supplies the Pallas kernel's VMEM-budgeted block_elements.
     donate = plan.donation if jax.default_backend() != "cpu" else ()
     compiled = build_inverse_helmholtz(
-        cfg.p, policy=cfg.policy, backend=cfg.backend, donate_args=donate
+        cfg.p, policy=cfg.policy, backend=cfg.backend, donate_args=donate,
+        plan=plan,
     )
     rng = np.random.default_rng(cfg.seed + 2 ** 31)
     if S is None:
@@ -196,3 +200,201 @@ def achieved_gflops(res: SimResult, p: int) -> float:
     """GFLOPS under the paper's Eq. (2)-(3) accounting."""
     n_op = res.elements * flops_per_element(p)
     return n_op / res.wall_s / 1e9 if res.wall_s > 0 else 0.0
+
+
+# ---------------------------------------------------------------------------
+# multi-operator chain driver (interpolation -> gradient -> Helmholtz)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ChainResult:
+    """One run of a whole pipeline off a single ChainPlan."""
+
+    batches: int
+    elements: int
+    wall_s: float
+    checksums: Dict[str, float]
+    plan: Optional[memchain.ChainPlan] = None
+    #: full chain outputs, qualified "stage.output" (collect_outputs=True)
+    outputs: Optional[Dict[str, np.ndarray]] = None
+
+
+def _chain_batch_inputs(
+    chain: memchain.ProgramChain,
+    E: int,
+    n_batches: int,
+    seed: int,
+    inputs: Optional[Dict[str, np.ndarray]],
+) -> Iterator[Dict[str, np.ndarray]]:
+    """Per-batch host-streamed inputs, qualified "stage.input".
+
+    ``inputs`` supplies full arrays (element-axis leading) to slice;
+    otherwise a deterministic synthetic stream is generated, matching
+    ``_batch_generator``'s [-1, 1] normalization."""
+    names = [
+        f"{s.name}.{n}"
+        for i, s in enumerate(chain.stages)
+        for n, _ in chain.host_element_inputs(i)
+    ]
+    shapes = {
+        f"{s.name}.{n}": v.shape
+        for i, s in enumerate(chain.stages)
+        for n, v in chain.host_element_inputs(i)
+    }
+    for b in range(n_batches):
+        if inputs is not None:
+            yield {q: inputs[q][b * E:(b + 1) * E] for q in names}
+        else:
+            rng = np.random.default_rng(seed + b)
+            yield {
+                q: rng.uniform(-1, 1, (E,) + shapes[q]).astype(np.float32)
+                for q in names
+            }
+
+
+def run_chain(
+    chain: memchain.ProgramChain,
+    plan: Optional[memchain.ChainPlan] = None,
+    *,
+    n_eq: Optional[int] = None,
+    mesh: Optional[Mesh] = None,
+    max_batches: Optional[int] = None,
+    seed: int = 0,
+    inputs: Optional[Dict[str, np.ndarray]] = None,
+    shared: Optional[Dict[str, np.ndarray]] = None,
+    collect_outputs: bool = False,
+) -> ChainResult:
+    """Execute a whole multi-operator pipeline off one ChainPlan.
+
+    Every batch flows through all stages back-to-back: bound streams
+    (e.g. interpolation's ``v`` into the gradient's ``u``) never leave
+    the device -- exactly the residency the plan prices.  Host-streamed
+    inputs come from ``inputs`` (full arrays, qualified "stage.input")
+    or a deterministic synthetic stream; ``shared`` supplies the
+    batch-invariant operands by bare name (synthesized when omitted).
+
+    ``collect_outputs`` returns the concatenated chain outputs for
+    verification against an unchained reference; by default only a
+    checksum per output crosses back (the plan's host-out streams are
+    still priced -- the reduction is a measurement convenience, as in
+    ``run_simulation``).
+    """
+    mesh = mesh or element_mesh()
+    if n_eq is None and inputs:
+        # the data bounds the problem -- derive n_eq before planning so
+        # the auto-sized E can never exceed what the arrays hold
+        n_eq = min(v.shape[0] for v in inputs.values())
+    if plan is None:
+        plan = memchain.plan_chain(
+            chain, target=memchannels.detect_target(),
+            cu_count=int(mesh.devices.size), n_eq=n_eq,
+        )
+    planned = tuple(sp.backend for sp in plan.stages)
+    compiled = tuple(s.backend for s in chain.stages)
+    if planned != compiled:
+        warnings.warn(
+            f"run_chain: plan backends {planned} differ from the "
+            f"compiled chain's {compiled}; executing the compiled chain. "
+            "Rebuild it for the plan (e.g. operators.build_cfd_chain("
+            "backends=..., chain_plan=plan)) to run as planned.",
+            RuntimeWarning,
+        )
+    E = plan.batch_elements
+    depth = max(sp.prefetch_depth for sp in plan.stages)
+    if n_eq is None:
+        n_eq = E * (max_batches if max_batches else 4)
+    if inputs is not None:
+        avail = min(v.shape[0] for v in inputs.values())
+        if E > avail:
+            raise ValueError(
+                f"plan batch E={E} exceeds the provided input arrays "
+                f"({avail} elements); re-plan with n_eq or pass larger "
+                "inputs"
+            )
+        # never slice past the data: an oversized n_eq would otherwise
+        # run empty batches while reporting their elements as work done
+        n_eq = min(n_eq, avail)
+    n_total = max(1, n_eq // E)
+    n = n_total if max_batches is None else min(max_batches, n_total)
+
+    elem_sharding = NamedSharding(mesh, P("elements"))
+    repl_sharding = NamedSharding(mesh, P())
+
+    shared_dev: Dict[str, jax.Array] = {}
+    for k, (name, node) in enumerate(sorted(chain.shared_operands().items())):
+        if shared is not None and name in shared:
+            host = np.asarray(shared[name])
+        else:
+            rng = np.random.default_rng(seed + 2 ** 31 + k)
+            host = rng.uniform(-1, 1, node.shape).astype(np.float32)
+        shared_dev[name] = jax.device_put(host, repl_sharding)
+
+    out_names = [
+        f"{s.name}.{n}"
+        for i, s in enumerate(chain.stages)
+        for n, _ in chain.chain_outputs(i)
+    ]
+
+    def stage_batch(batch):
+        return {
+            k: jax.device_put(v, elem_sharding) for k, v in batch.items()
+        }
+
+    def compute(staged):
+        live: Dict[str, jax.Array] = {}
+        results: Dict[str, jax.Array] = {}
+        for i, s in enumerate(chain.stages):
+            env: Dict[str, jax.Array] = {}
+            for name in s.program.inputs:
+                if name in chain.resolved[i]:
+                    p_idx, out_name = chain.resolved[i][name]
+                    env[name] = live[
+                        f"{chain.stages[p_idx].name}.{out_name}"
+                    ]
+                elif name in shared_dev:
+                    env[name] = shared_dev[name]
+                else:
+                    env[name] = staged[f"{s.name}.{name}"]
+            outs = s.compiled.batched_fn(env)
+            for out_name, val in outs.items():
+                q = f"{s.name}.{out_name}"
+                live[q] = val
+                if q in out_names:
+                    results[q] = val
+        return results
+
+    if collect_outputs:
+        reduce_fn = lambda outs: jax.device_get(outs)
+    else:
+        reduce_fn = lambda outs: {
+            q: jnp.sum(v) for q, v in outs.items()
+        }
+
+    t0 = time.perf_counter()
+    per_batch = mempipe.run_pipelined(
+        compute,
+        _chain_batch_inputs(chain, E, n, seed, inputs),
+        stage_fn=stage_batch,
+        depth=depth,
+        reduce_fn=reduce_fn,
+    )
+    wall = time.perf_counter() - t0
+
+    checksums: Dict[str, float] = {q: 0.0 for q in out_names}
+    outputs: Optional[Dict[str, np.ndarray]] = None
+    if collect_outputs:
+        outputs = {
+            q: np.concatenate([np.asarray(b[q]) for b in per_batch])
+            for q in out_names
+        }
+        for q in out_names:
+            checksums[q] = float(np.sum(outputs[q], dtype=np.float64))
+    else:
+        for b in per_batch:
+            for q, v in b.items():
+                checksums[q] += float(v)
+    return ChainResult(
+        batches=n, elements=n * E, wall_s=wall, checksums=checksums,
+        plan=plan, outputs=outputs,
+    )

@@ -31,7 +31,14 @@ DEFAULT_VMEM_BUDGET = 64 * 1024 * 1024
 
 @dataclasses.dataclass
 class Group:
-    """One dataflow stage: a connected set of IR nodes."""
+    """One dataflow stage: a connected set of IR nodes.
+
+    ``bytes_per_scalar`` records the scalar width of the policy the
+    schedule was built for; byte-count methods default to it, so a
+    bfloat16 schedule reports 2-byte streams without every caller having
+    to re-thread the width (historically they defaulted to 4, silently
+    disagreeing with low-precision policies).
+    """
 
     nodes: List[ir.Node]
     #: values flowing in from other groups or program inputs
@@ -39,62 +46,88 @@ class Group:
     #: values consumed by later groups or program outputs
     out_streams: List[ir.Node]
     name: str = ""
+    bytes_per_scalar: int = 4
 
     @property
     def flops(self) -> int:
         return sum(n.flops() for n in self.nodes)
 
-    def working_set(self, bytes_per_scalar: int) -> int:
+    def _bps(self, bytes_per_scalar: int | None) -> int:
+        return (
+            self.bytes_per_scalar
+            if bytes_per_scalar is None else bytes_per_scalar
+        )
+
+    def working_set(self, bytes_per_scalar: int | None = None) -> int:
         """Bytes resident while the group executes: inputs + outputs +
         internal temporaries (before liveness sharing)."""
+        bps = self._bps(bytes_per_scalar)
         vals: Set[int] = set()
         total = 0
         for n in list(self.nodes) + list(self.in_streams):
             if n.uid not in vals:
                 vals.add(n.uid)
-                total += n.size * bytes_per_scalar
+                total += n.size * bps
         return total
 
-    def in_stream_bytes(self, bytes_per_scalar: int = 4) -> int:
+    def in_stream_bytes(self, bytes_per_scalar: int | None = None) -> int:
         """Bytes flowing into this group per element (HBM reads)."""
-        return sum(n.size for n in self.in_streams) * bytes_per_scalar
+        return sum(n.size for n in self.in_streams) * self._bps(
+            bytes_per_scalar
+        )
 
-    def out_stream_bytes(self, bytes_per_scalar: int = 4) -> int:
+    def out_stream_bytes(self, bytes_per_scalar: int | None = None) -> int:
         """Bytes this group materializes per element (HBM writes)."""
-        return sum(n.size for n in self.out_streams) * bytes_per_scalar
+        return sum(n.size for n in self.out_streams) * self._bps(
+            bytes_per_scalar
+        )
 
 
 @dataclasses.dataclass
 class Schedule:
     groups: List[Group]
     program: ir.Program
+    #: scalar width the schedule was built for (policy.bits // 8); byte
+    #: methods use it when no explicit width is passed
+    bytes_per_scalar: int = 4
 
     @property
     def critical_flops(self) -> int:
         """The longest group bounds pipeline throughput (paper 3.4.3)."""
         return max(g.flops for g in self.groups) if self.groups else 0
 
-    def stream_bytes(self, bytes_per_scalar: int = 4) -> Dict[str, int]:
+    def _bps(self, bytes_per_scalar: int | None) -> int:
+        return (
+            self.bytes_per_scalar
+            if bytes_per_scalar is None else bytes_per_scalar
+        )
+
+    def stream_bytes(
+        self, bytes_per_scalar: int | None = None
+    ) -> Dict[str, int]:
         """Bytes each group materializes across its boundary, per element
         (the HBM round-trip cost the memory planner prices)."""
+        bps = self._bps(bytes_per_scalar)
         return {
-            g.name: g.out_stream_bytes(bytes_per_scalar) for g in self.groups
+            g.name: g.out_stream_bytes(bps) for g in self.groups
         }
 
     def stream_io_bytes(
-        self, bytes_per_scalar: int = 4
+        self, bytes_per_scalar: int | None = None
     ) -> Dict[str, Tuple[int, int]]:
         """Per-group (in, out) stream bytes per element -- the planner's
         view of every dataflow edge (paper Fig. 14's FIFO widths)."""
+        bps = self._bps(bytes_per_scalar)
         return {
             g.name: (
-                g.in_stream_bytes(bytes_per_scalar),
-                g.out_stream_bytes(bytes_per_scalar),
+                g.in_stream_bytes(bps),
+                g.out_stream_bytes(bps),
             )
             for g in self.groups
         }
 
-    def summary(self, bytes_per_scalar: int = 4) -> str:
+    def summary(self, bytes_per_scalar: int | None = None) -> str:
+        bps = self._bps(bytes_per_scalar)
         lines = [
             f"{'group':<12} {'nodes':>5} {'flops':>12} {'ws_bytes':>10} "
             f"{'in_B':>8} {'out_B':>8}"
@@ -102,9 +135,9 @@ class Schedule:
         for g in self.groups:
             lines.append(
                 f"{g.name:<12} {len(g.nodes):>5} {g.flops:>12} "
-                f"{g.working_set(bytes_per_scalar):>10} "
-                f"{g.in_stream_bytes(bytes_per_scalar):>8} "
-                f"{g.out_stream_bytes(bytes_per_scalar):>8}"
+                f"{g.working_set(bps):>10} "
+                f"{g.in_stream_bytes(bps):>8} "
+                f"{g.out_stream_bytes(bps):>8}"
             )
         return "\n".join(lines)
 
@@ -123,7 +156,9 @@ def schedule(
     """
     order = [n for n in prog.toposort() if not isinstance(n, ir.Input)]
     if not order:
-        return Schedule(groups=[], program=prog)
+        return Schedule(
+            groups=[], program=prog, bytes_per_scalar=bytes_per_scalar
+        )
 
     # --- initial partition: one group per value --------------------------
     group_of: Dict[int, int] = {n.uid: i for i, n in enumerate(order)}
@@ -221,7 +256,7 @@ def schedule(
                 outs.append(n)
         groups.append(
             Group(nodes=nodes, in_streams=ins, out_streams=outs,
-                  name=f"g{idx}")
+                  name=f"g{idx}", bytes_per_scalar=bytes_per_scalar)
         )
 
     # human-friendly names for the paper's canonical 3-stage split
@@ -229,4 +264,6 @@ def schedule(
         groups[0].name, groups[1].name, groups[2].name = (
             "gemm", "mmult", "gemm_inv",
         )
-    return Schedule(groups=groups, program=prog)
+    return Schedule(
+        groups=groups, program=prog, bytes_per_scalar=bytes_per_scalar
+    )

@@ -24,6 +24,37 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def block_working_set_bytes(
+    p: int, block_elements: int, *, bytes_per_scalar: int = 4
+) -> int:
+    """VMEM bytes while one element block flows through the fused kernel:
+    the u/D/v block slices plus the double-buffered t/r scratch pair
+    (Mnemosyne-style sharing keeps two intermediates live), plus the
+    resident S operator.  Matches ``memory.layout.block_working_set_bytes``
+    on the Inverse-Helmholtz program."""
+    return (p * p + 5 * block_elements * p ** 3) * bytes_per_scalar
+
+
+def block_elements_for_vmem(
+    p: int,
+    vmem_bytes: int,
+    *,
+    bytes_per_scalar: int = 4,
+    reserve_fraction: float = 0.5,
+) -> int:
+    """Largest power-of-two element block whose working set fits the
+    given on-chip memory (half reserved for the Pallas grid pipeline's
+    DMA double buffering).  This is how a MemoryPlan's VMEM budget
+    becomes the kernel's ``block_elements``."""
+    budget = int(vmem_bytes * reserve_fraction)
+    be = 1
+    while block_working_set_bytes(
+        p, be * 2, bytes_per_scalar=bytes_per_scalar
+    ) <= budget:
+        be *= 2
+    return be
+
+
 def inverse_helmholtz(
     S: jax.Array,
     D: jax.Array,

@@ -7,19 +7,30 @@ and what it is predicted to cost -- then explores that design space
 CHARM-style and verifies the winners by measurement.
 
   channels  -- per-target memory datasheets (shared with analysis.roofline)
-  layout    -- stream->buffer assignment, packing, auto batch sizing
+  layout    -- stream->buffer assignment, packing, auto batch sizing,
+               VMEM block sizing (the Pallas kernel's block_elements)
   pipeline  -- generic K-deep prefetch/double-buffer transfer engine
-  dse       -- design-space explorer + analytic cost model
+  chain     -- multi-operator ProgramChain planning (inter-stage streams
+               stay resident in HBM; one co-sized E for the pipeline)
+  dse       -- design-space explorer + analytic cost model + the
+               measured-feedback CostCorrection
   plan      -- the MemoryPlan dataclasses and the Fig.-14-style report
 """
-from . import channels, dse, layout, pipeline, plan
+from . import chain, channels, dse, layout, pipeline, plan
+from .chain import ChainPlan, ChainStage, ProgramChain, plan_chain
 from .channels import ALVEO_U280, CPU_HOST, TPU_V5E, MemoryTarget, detect_target
-from .dse import Candidate, DesignSpace, explore, make_plan, pareto_front
+from .dse import (Candidate, ChainCandidate, ChainDesignSpace,
+                  CostCorrection, DesignSpace, explore, explore_chain,
+                  fit_correction, make_plan, measure_chain_plan,
+                  pareto_front)
 from .plan import BufferSpec, CostBreakdown, MemoryPlan
 
 __all__ = [
-    "channels", "dse", "layout", "pipeline", "plan",
+    "chain", "channels", "dse", "layout", "pipeline", "plan",
     "MemoryTarget", "ALVEO_U280", "TPU_V5E", "CPU_HOST", "detect_target",
     "Candidate", "DesignSpace", "explore", "make_plan", "pareto_front",
+    "ChainCandidate", "ChainDesignSpace", "CostCorrection",
+    "explore_chain", "fit_correction", "measure_chain_plan",
+    "ProgramChain", "ChainStage", "ChainPlan", "plan_chain",
     "BufferSpec", "CostBreakdown", "MemoryPlan",
 ]

@@ -1,0 +1,599 @@
+"""Multi-operator program planning: one memory architecture for a whole
+CFD pipeline (paper Sec. 5 -- the headline numbers come from composed
+applications, not single operators).
+
+A :class:`ProgramChain` is an ordered sequence of compiled programs
+(e.g. interpolation -> gradient -> inverse Helmholtz) with *bindings*
+that wire a producer stage's output to a consumer stage's input.  The
+chain planner then makes the three decisions the single-program planner
+cannot:
+
+  * **inter-stage residency** -- a bound producer->consumer stream never
+    crosses the host link: it is written to HBM once by the producer and
+    read once by the consumer (buffer role ``resident``).  Only the
+    chain's fringe (unbound inputs, unconsumed outputs) is host-streamed.
+  * **co-sized E** -- one batch size is chosen so that *every* stage's
+    per-batch stream I/O fits one pseudo-channel (the paper's rule,
+    applied to the worst stage), so a batch flows through the whole
+    pipeline without re-blocking.
+  * **conflict-free placement** -- all stages' buffers share one
+    round-robin :class:`~repro.memory.layout.ChannelAllocator`; shared
+    (batch-invariant) operands with the same name are placed once.
+
+The result is a :class:`ChainPlan`: per-stage buffers/costs plus chain
+aggregates, rendered by ``report()`` like the single-program plan.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+from ..core import ir
+from ..core.emit import CompiledProgram
+from ..core.precision import POLICIES
+from ..core.schedule import Schedule, schedule as make_schedule
+from . import layout
+from .channels import MemoryTarget, detect_target
+from .plan import (BufferSpec, CostBreakdown, channels_used,
+                   hbm_stream_bytes, host_stream_bytes)
+
+
+@dataclasses.dataclass
+class ChainStage:
+    """One pipeline stage: a compiled program plus input bindings.
+
+    ``bindings`` maps this stage's input names to a *qualified* earlier
+    output, ``"<stage>.<output>"``.  Inputs left unbound are either
+    host-streamed (element vars) or shared operands (matched chain-wide
+    by bare name).
+    """
+
+    name: str
+    compiled: CompiledProgram
+    bindings: Dict[str, str] = dataclasses.field(default_factory=dict)
+
+    @property
+    def program(self) -> ir.Program:
+        return self.compiled.program
+
+    @property
+    def backend(self) -> str:
+        return self.compiled.backend
+
+
+StageLike = Union[ChainStage, Tuple[str, CompiledProgram],
+                  Tuple[str, CompiledProgram, Dict[str, str]]]
+
+
+class ChainError(ValueError):
+    """Raised on malformed chains (bad bindings, shape mismatches)."""
+
+
+class ProgramChain:
+    """An ordered multi-operator program with producer->consumer wiring.
+
+    Stages may be :class:`ChainStage` objects or ``(name, compiled)`` /
+    ``(name, compiled, bindings)`` tuples.  Unqualified input names that
+    match an earlier stage's output name are auto-bound to the most
+    recent such producer.
+    """
+
+    def __init__(self, stages: Sequence[StageLike]):
+        self.stages: List[ChainStage] = []
+        for s in stages:
+            if isinstance(s, ChainStage):
+                self.stages.append(s)
+            else:
+                name, compiled = s[0], s[1]
+                bindings = dict(s[2]) if len(s) > 2 else {}
+                self.stages.append(ChainStage(name, compiled, bindings))
+        if not self.stages:
+            raise ChainError("empty chain")
+        self._validate_names()
+        #: per stage: input name -> (producer stage index, output name)
+        self.resolved: List[Dict[str, Tuple[int, str]]] = (
+            self._resolve_bindings()
+        )
+        #: (stage index, output name) consumed by a later stage
+        self.consumed: set = {
+            src for binds in self.resolved for src in binds.values()
+        }
+        self._validate_shared()
+
+    # -- construction helpers ------------------------------------------------
+    def _validate_names(self) -> None:
+        seen = set()
+        for s in self.stages:
+            if not s.name or "." in s.name:
+                raise ChainError(f"bad stage name {s.name!r}")
+            if s.name in seen:
+                raise ChainError(f"duplicate stage name {s.name!r}")
+            seen.add(s.name)
+
+    def _resolve_bindings(self) -> List[Dict[str, Tuple[int, str]]]:
+        idx_of = {s.name: i for i, s in enumerate(self.stages)}
+        resolved: List[Dict[str, Tuple[int, str]]] = []
+        for i, s in enumerate(self.stages):
+            elem = set(s.program.element_vars)
+            binds: Dict[str, Tuple[int, str]] = {}
+            for in_name, src in s.bindings.items():
+                if in_name not in s.program.inputs:
+                    raise ChainError(
+                        f"{s.name}: binding for unknown input {in_name!r}"
+                    )
+                if "." not in src:
+                    raise ChainError(
+                        f"{s.name}.{in_name}: binding {src!r} must be "
+                        "qualified '<stage>.<output>'"
+                    )
+                p_name, out_name = src.split(".", 1)
+                if p_name not in idx_of or idx_of[p_name] >= i:
+                    raise ChainError(
+                        f"{s.name}.{in_name}: producer {p_name!r} is not "
+                        "an earlier stage"
+                    )
+                p = idx_of[p_name]
+                if out_name not in self.stages[p].program.outputs:
+                    raise ChainError(
+                        f"{s.name}.{in_name}: {p_name!r} has no output "
+                        f"{out_name!r}"
+                    )
+                binds[in_name] = (p, out_name)
+            # auto-bind: unbound element inputs matching an earlier
+            # stage's output name (most recent producer wins)
+            for in_name in s.program.inputs:
+                if in_name in binds or in_name not in elem:
+                    continue
+                for p in range(i - 1, -1, -1):
+                    if in_name in self.stages[p].program.outputs:
+                        binds[in_name] = (p, in_name)
+                        break
+            # validate shapes + element-var discipline
+            for in_name, (p, out_name) in binds.items():
+                src_node = self.stages[p].program.outputs[out_name]
+                dst_node = s.program.inputs[in_name]
+                if src_node.shape != dst_node.shape:
+                    raise ChainError(
+                        f"{s.name}.{in_name}: shape {dst_node.shape} != "
+                        f"{self.stages[p].name}.{out_name} "
+                        f"{src_node.shape}"
+                    )
+                if (in_name not in elem
+                        or out_name not in
+                        self.stages[p].program.element_vars):
+                    raise ChainError(
+                        f"{s.name}.{in_name}: chain streams must be "
+                        "element vars on both sides"
+                    )
+            resolved.append(binds)
+        return resolved
+
+    def _validate_shared(self) -> None:
+        shapes: Dict[str, Tuple[int, ...]] = {}
+        for name, node in self.shared_operands().items():
+            shapes[name] = node.shape
+        for i, s in enumerate(self.stages):
+            elem = set(s.program.element_vars)
+            for name, node in s.program.inputs.items():
+                if name in elem or name in self.resolved[i]:
+                    continue
+                if node.shape != shapes[name]:
+                    raise ChainError(
+                        f"shared operand {name!r}: conflicting shapes "
+                        f"{shapes[name]} vs {node.shape}"
+                    )
+
+    # -- structure queries ---------------------------------------------------
+    @property
+    def name(self) -> str:
+        return "->".join(s.name for s in self.stages)
+
+    def host_element_inputs(self, i: int) -> List[Tuple[str, ir.Node]]:
+        """Stage i's element inputs streamed from the host (unbound)."""
+        s = self.stages[i]
+        elem = set(s.program.element_vars)
+        return [
+            (n, v) for n, v in s.program.inputs.items()
+            if n in elem and n not in self.resolved[i]
+        ]
+
+    def resident_outputs(self, i: int) -> List[Tuple[str, ir.Node]]:
+        """Stage i's outputs consumed by a later stage (HBM-resident)."""
+        return [
+            (n, v) for n, v in self.stages[i].program.outputs.items()
+            if (i, n) in self.consumed
+        ]
+
+    def chain_outputs(self, i: int) -> List[Tuple[str, ir.Node]]:
+        """Stage i's outputs streamed back to the host (unconsumed)."""
+        return [
+            (n, v) for n, v in self.stages[i].program.outputs.items()
+            if (i, n) not in self.consumed
+        ]
+
+    def shared_operands(self) -> Dict[str, ir.Node]:
+        """Batch-invariant operands, deduplicated chain-wide by name
+        (same name => one resident buffer, one host array)."""
+        shared: Dict[str, ir.Node] = {}
+        for i, s in enumerate(self.stages):
+            elem = set(s.program.element_vars)
+            for name, node in s.program.inputs.items():
+                if name in elem or name in self.resolved[i]:
+                    continue
+                shared.setdefault(name, node)
+        return shared
+
+    def stage_stream_bytes_per_element(
+        self, i: int, bytes_per_scalar: int
+    ) -> int:
+        """Per-element bytes stage i moves through HBM per batch (host
+        streams + resident reads/writes) -- the quantity the paper's
+        channel rule divides a pseudo-channel by."""
+        total = sum(
+            v.size for _, v in self.host_element_inputs(i)
+        ) + sum(v.size for _, v in self.chain_outputs(i))
+        total += sum(v.size for _, v in self.resident_outputs(i))
+        for in_name, (p, out_name) in self.resolved[i].items():
+            total += self.stages[p].program.outputs[out_name].size
+        return total * bytes_per_scalar
+
+    def auto_batch_elements(
+        self,
+        target: MemoryTarget,
+        *,
+        bytes_per_scalar: int,
+        channel_bytes: Optional[int] = None,
+        n_eq: Optional[int] = None,
+    ) -> int:
+        """Co-sized E: the largest batch whose stream I/O fits one
+        pseudo-channel for *every* stage (min over stages)."""
+        cb = channel_bytes if channel_bytes is not None else target.channel_bytes
+        e = None
+        for i in range(len(self.stages)):
+            per = self.stage_stream_bytes_per_element(i, bytes_per_scalar)
+            ei = max(1, cb // per) if per else cb
+            e = ei if e is None else min(e, ei)
+        if n_eq is not None:
+            e = min(e, max(1, n_eq))
+        return int(max(1, e))
+
+
+# ---------------------------------------------------------------------------
+# the chain plan
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class StagePlan:
+    """One stage's slice of the chain plan (buffers it introduces)."""
+
+    name: str
+    backend: str
+    prefetch_depth: int
+    flops_per_element: int
+    buffers: Tuple[BufferSpec, ...]
+    cost: CostBreakdown
+    block_elements: int = 0
+    block_working_set_bytes: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class ChainCost:
+    """Per-batch chain timing: stages run back-to-back on one batch."""
+
+    stages: Tuple[CostBreakdown, ...]
+
+    @property
+    def t_serial(self) -> float:
+        return sum(c.t_serial for c in self.stages)
+
+    @property
+    def t_pipelined(self) -> float:
+        return sum(c.t_pipelined for c in self.stages)
+
+    @property
+    def bottleneck_stage(self) -> int:
+        """Index of the stage dominating the pipelined chain time."""
+        times = [c.t_pipelined for c in self.stages]
+        return times.index(max(times))
+
+    @property
+    def overlap_speedup(self) -> float:
+        return self.t_serial / self.t_pipelined if self.t_pipelined else 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class ChainPlan:
+    """The complete memory architecture for a multi-operator program."""
+
+    chain: str                  # e.g. "interp->grad->helmholtz"
+    target: MemoryTarget
+    policy: str
+    batch_elements: int         # shared E, co-sized over all stages
+    cu_count: int
+    stages: Tuple[StagePlan, ...]
+    cost: ChainCost
+    feasible: bool = True
+    infeasible_reason: str = ""
+
+    @property
+    def buffers(self) -> Tuple[BufferSpec, ...]:
+        return tuple(b for s in self.stages for b in s.buffers)
+
+    @property
+    def resident_bytes(self) -> int:
+        return sum(b.resident_bytes for b in self.buffers)
+
+    @property
+    def host_stream_bytes(self) -> int:
+        """Host-link bytes per batch across the whole chain -- the number
+        the paper's residency optimization shrinks."""
+        return host_stream_bytes(self.buffers)
+
+    @property
+    def hbm_stream_bytes(self) -> int:
+        return hbm_stream_bytes(self.buffers)
+
+    @property
+    def channels_used(self) -> int:
+        return channels_used(self.buffers)
+
+    @property
+    def resident_stream_bytes(self) -> int:
+        """Per-batch bytes kept on-device between stages (the traffic a
+        stage-by-stage host round-trip would have added to the link)."""
+        return sum(
+            b.batch_bytes for b in self.buffers if b.role == "resident"
+        )
+
+    def batches_for(self, n_eq: int) -> int:
+        return max(1, n_eq // self.batch_elements)
+
+    def report(self) -> str:
+        t = self.target
+        mib = 2 ** 20
+        lines = [
+            f"ChainPlan {self.chain}  target={t.name}  policy={self.policy}",
+            f"  E={self.batch_elements} elements/batch (co-sized)   "
+            f"CUs={self.cu_count}   "
+            f"feasible={'yes' if self.feasible else 'NO: ' + self.infeasible_reason}",
+            f"  channels: {self.channels_used}/{t.n_channels} used   "
+            f"resident {self.resident_bytes / mib:.1f} MiB "
+            f"of {t.usable_hbm_bytes / mib:.0f} MiB usable",
+            f"  host stream {self.host_stream_bytes / mib:.1f} MiB/batch   "
+            f"inter-stage resident {self.resident_stream_bytes / mib:.1f} "
+            f"MiB/batch   hbm traffic "
+            f"{self.hbm_stream_bytes / mib:.1f} MiB/batch",
+        ]
+        for sp in self.stages:
+            c = sp.cost
+            lines += [
+                "",
+                f"  stage {sp.name}  backend={sp.backend}  "
+                f"K={sp.prefetch_depth}  "
+                f"BE={sp.block_elements} "
+                f"(vmem ws {sp.block_working_set_bytes / mib:.2f} MiB)",
+                f"    {'buffer':<20} {'role':<9} {'elem B':>7} "
+                f"{'padded':>7} {'batch MiB':>10} {'repl':>5}  channels",
+            ]
+            for b in sp.buffers:
+                ch = ",".join(str(i) for i in b.channels[:6])
+                if len(b.channels) > 6:
+                    ch += f",..x{len(b.channels)}"
+                lines.append(
+                    f"    {b.name:<20} {b.role:<9} {b.element_bytes:>7} "
+                    f"{b.padded_bytes:>7} {b.batch_bytes / mib:>10.2f} "
+                    f"{b.replicas:>5}  [{ch}]"
+                )
+            lines.append(
+                f"    predicted/batch: compute {c.t_compute * 1e3:.3f} ms  "
+                f"hbm {c.t_hbm * 1e3:.3f} ms  host {c.t_host * 1e3:.3f} ms"
+                f"  -> {c.bottleneck}-bound"
+            )
+        cc = self.cost
+        lines += [
+            "",
+            f"  chain serial {cc.t_serial * 1e3:.3f} ms/batch   "
+            f"pipelined {cc.t_pipelined * 1e3:.3f} ms/batch   "
+            f"(overlap speedup {cc.overlap_speedup:.2f}x, bottleneck "
+            f"stage {self.stages[cc.bottleneck_stage].name})",
+        ]
+        return "\n".join(lines)
+
+
+def plan_chain(
+    chain: ProgramChain,
+    *,
+    target: Optional[MemoryTarget] = None,
+    policy: str = "float32",
+    backends: Optional[Sequence[str]] = None,
+    batch_elements: Optional[int] = None,
+    prefetch_depth: Union[int, Sequence[int]] = 1,
+    cu_count: int = 1,
+    n_eq: Optional[int] = None,
+    channel_bytes: Optional[int] = None,
+    _sched_cache: Optional[Dict[Tuple[int, int], Schedule]] = None,
+) -> ChainPlan:
+    """Plan one memory architecture for a whole ProgramChain.
+
+    ``backends`` overrides each stage's backend for planning (the DSE
+    sweeps hypothetical per-stage backends this way); ``prefetch_depth``
+    may be one K for the whole chain or one per stage.  Deterministic:
+    same arguments, same plan.  ``_sched_cache`` (keyed by stage index
+    and scalar width) lets sweeps reuse staged-backend schedules across
+    design points instead of re-partitioning per candidate.
+    """
+    # local import: dse depends on this module for chain exploration
+    from .dse import predict_cost
+
+    target = target if target is not None else detect_target()
+    if policy not in POLICIES:
+        raise ValueError(f"unknown policy {policy!r}; known: {sorted(POLICIES)}")
+    pol = POLICIES[policy]
+    bps = pol.bits // 8
+    n_stages = len(chain.stages)
+
+    if backends is None:
+        backends = [s.backend for s in chain.stages]
+    if len(backends) != n_stages:
+        raise ValueError(f"need {n_stages} backends, got {len(backends)}")
+    if isinstance(prefetch_depth, int):
+        depths = [prefetch_depth] * n_stages
+    else:
+        depths = list(prefetch_depth)
+        if len(depths) != n_stages:
+            raise ValueError(f"need {n_stages} prefetch depths")
+    any_prefetch = any(d > 0 for d in depths)
+
+    e = batch_elements if batch_elements is not None else (
+        chain.auto_batch_elements(
+            target, bytes_per_scalar=bps,
+            channel_bytes=channel_bytes, n_eq=n_eq,
+        )
+    )
+    e = max(1, int(e))
+    if n_eq is not None:
+        e = min(e, max(1, n_eq))
+    n_batches = max(1, n_eq // e) if n_eq else None
+
+    alloc = layout.ChannelAllocator(target.n_channels)
+    shared_ops = chain.shared_operands()
+    placed_shared: Dict[str, BufferSpec] = {}
+    resident_spec: Dict[Tuple[int, str], BufferSpec] = {}
+    stage_plans: List[StagePlan] = []
+    max_stage_ws = 0
+
+    for i, stage in enumerate(chain.stages):
+        prog = stage.program
+        backend = backends[i]
+        depth = depths[i]
+        in_repl = depth + 2 if depth > 0 else 1
+        io_repl = 2 if any_prefetch else 1
+        bufs: List[BufferSpec] = []
+
+        def add(name, node, role, replicas, group=""):
+            b = layout.make_buffer(
+                name, node, role, replicas, target=target,
+                bytes_per_scalar=bps, batch_elements=e,
+                alloc=alloc, group=group,
+            )
+            bufs.append(b)
+            return b
+
+        for name, node in chain.host_element_inputs(i):
+            add(f"{stage.name}.{name}", node, "in", in_repl)
+        for name, node in chain.resident_outputs(i):
+            resident_spec[(i, name)] = add(
+                f"{stage.name}.{name}", node, "resident", io_repl
+            )
+        for name, node in chain.chain_outputs(i):
+            add(f"{stage.name}.{name}", node, "out", io_repl)
+        for name, node in prog.inputs.items():
+            if (name in prog.element_vars or name in chain.resolved[i]
+                    or name in placed_shared):
+                continue
+            if name in shared_ops:
+                placed_shared[name] = add(name, node, "shared", 1)
+
+        sched: Optional[Schedule] = None
+        if backend == "staged":
+            key = (i, bps)
+            if _sched_cache is not None and key in _sched_cache:
+                sched = _sched_cache[key]
+            else:
+                sched = make_schedule(prog, bytes_per_scalar=bps)
+                if _sched_cache is not None:
+                    _sched_cache[key] = sched
+            out_uids = {v.uid for v in prog.outputs.values()}
+            input_uids = {v.uid for v in prog.inputs.values()}
+            for g in sched.groups:
+                streamed = [
+                    n for n in g.out_streams
+                    if n.uid not in out_uids and n.uid not in input_uids
+                ]
+                for k, node in enumerate(streamed):
+                    add(f"{stage.name}.{g.name}.s{k}", node, "inter", 1,
+                        group=g.name)
+            max_stage_ws = max(
+                max_stage_ws,
+                max(g.working_set(bps) for g in sched.groups),
+            )
+
+        # stage cost: host link carries only this stage's in/out streams;
+        # HBM carries those plus resident reads/writes and 2x inter
+        stage_hbm = hbm_stream_bytes(bufs)
+        for in_name, (p, out_name) in chain.resolved[i].items():
+            # consumer-side read of a resident buffer placed by stage p
+            # (the write half is already billed to the producer's hbm
+            # count above, via the 2x resident rule on its own buffer)
+            stage_hbm += resident_spec[(p, out_name)].batch_bytes
+        # a producer's resident buffer counts write-only for itself
+        stage_hbm -= sum(
+            b.batch_bytes for b in bufs if b.role == "resident"
+        )
+        # channels this stage touches: its own buffers, the resident
+        # streams it reads, and the shared operands it consumes
+        touched = list(bufs)
+        touched += [
+            resident_spec[src] for src in chain.resolved[i].values()
+        ]
+        touched += [
+            placed_shared[n] for n in prog.inputs
+            if n in placed_shared
+        ]
+        cost = predict_cost(
+            target, policy=pol.name, batch_elements=e,
+            flops_per_element=prog.total_flops(),
+            host_bytes=host_stream_bytes(bufs),
+            hbm_bytes=stage_hbm,
+            channels_used=channels_used(touched),
+            prefetch_depth=depth, cu_count=cu_count,
+            n_batches=n_batches,
+        )
+        blk_cap = layout.vmem_block_elements(
+            prog, target, bytes_per_scalar=bps
+        )
+        blk = layout.largest_divisor_leq(e, blk_cap)
+        stage_plans.append(
+            StagePlan(
+                name=stage.name, backend=backend, prefetch_depth=depth,
+                flops_per_element=prog.total_flops(),
+                buffers=tuple(bufs), cost=cost,
+                block_elements=blk,
+                block_working_set_bytes=layout.block_working_set_bytes(
+                    prog, blk, bytes_per_scalar=bps
+                ),
+            )
+        )
+
+    plan = ChainPlan(
+        chain=chain.name, target=target, policy=pol.name,
+        batch_elements=e, cu_count=cu_count,
+        stages=tuple(stage_plans),
+        cost=ChainCost(stages=tuple(sp.cost for sp in stage_plans)),
+    )
+    worst_blk = max(sp.block_working_set_bytes for sp in stage_plans)
+    feasible, reason = True, ""
+    if plan.resident_bytes > target.usable_hbm_bytes:
+        feasible = False
+        reason = (
+            f"resident {plan.resident_bytes / 2**20:.0f} MiB exceeds "
+            f"usable HBM {target.usable_hbm_bytes / 2**20:.0f} MiB"
+        )
+    elif worst_blk > target.vmem_bytes:
+        feasible = False
+        reason = (
+            f"stage block working set {worst_blk} B exceeds on-chip "
+            f"{target.vmem_bytes} B"
+        )
+    elif max_stage_ws > target.vmem_bytes:
+        feasible = False
+        reason = (
+            f"stage working set {max_stage_ws} B exceeds on-chip "
+            f"{target.vmem_bytes} B"
+        )
+    if not feasible:
+        plan = dataclasses.replace(
+            plan, feasible=False, infeasible_reason=reason
+        )
+    return plan

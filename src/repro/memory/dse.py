@@ -155,6 +155,13 @@ def make_plan(
         n_batches=n_batches,
     )
 
+    # on-chip block: largest divisor of E whose fused-kernel working set
+    # fits the VMEM budget (drives the Pallas kernel's block_elements)
+    blk = layout.largest_divisor_leq(
+        e, layout.vmem_block_elements(prog, target, bytes_per_scalar=bps)
+    )
+    blk_ws = layout.block_working_set_bytes(prog, blk, bytes_per_scalar=bps)
+
     feasible, reason = True, ""
     resident = sum(b.resident_bytes for b in bufs)
     if resident > target.usable_hbm_bytes:
@@ -162,6 +169,13 @@ def make_plan(
         reason = (
             f"resident {resident / 2**20:.0f} MiB exceeds usable HBM "
             f"{target.usable_hbm_bytes / 2**20:.0f} MiB"
+        )
+    elif blk_ws > target.vmem_bytes:
+        # even the BE=1 floor cannot fit on-chip: no fused kernel can run
+        feasible = False
+        reason = (
+            f"block working set {blk_ws} B (BE={blk}) exceeds on-chip "
+            f"{target.vmem_bytes} B"
         )
     elif sched is not None:
         ws = max(g.working_set(bps) for g in sched.groups)
@@ -177,6 +191,7 @@ def make_plan(
         batch_elements=e, prefetch_depth=prefetch_depth, cu_count=cu_count,
         buffers=bufs, cost=cost, feasible=feasible,
         infeasible_reason=reason, flops_per_element=flops_pe,
+        block_elements=blk, block_working_set_bytes=blk_ws,
     )
 
 
@@ -204,10 +219,65 @@ class Candidate:
     plan: MemoryPlan
     predicted_s_per_element: float
     measured_s_per_element: Optional[float] = None
+    #: prediction after the measured-feedback correction (calibrate=True)
+    corrected_s_per_element: Optional[float] = None
 
     @property
     def verified(self) -> bool:
         return self.measured_s_per_element is not None
+
+
+@dataclasses.dataclass(frozen=True)
+class CostCorrection:
+    """Measured-feedback correction for the analytic model (the ROADMAP's
+    'learned correction'): a multiplicative factor fit as the geometric
+    mean of measured/predicted ratios over verified candidates.  A
+    single factor preserves the model's monotonicity guarantees while
+    absorbing the systematic bias (dispatch overheads, allocator noise)
+    the paper's predict-then-build loop observes."""
+
+    factor: float = 1.0
+    n_samples: int = 0
+
+    def corrected(self, predicted_s: float) -> float:
+        return predicted_s * self.factor
+
+
+def fit_correction(cands: Sequence[Candidate]) -> CostCorrection:
+    """Fit the correction from every measured candidate (identity when
+    nothing was measured)."""
+    import math
+
+    ratios = [
+        c.measured_s_per_element / c.predicted_s_per_element
+        for c in cands
+        if c.verified and c.predicted_s_per_element > 0
+    ]
+    if not ratios:
+        return CostCorrection()
+    log_mean = sum(math.log(r) for r in ratios) / len(ratios)
+    return CostCorrection(factor=math.exp(log_mean), n_samples=len(ratios))
+
+
+def apply_correction(
+    cands: List[Candidate], correction: CostCorrection
+) -> List[Candidate]:
+    """Annotate every candidate with its corrected prediction and re-rank
+    (measured values, where present, outrank corrected predictions)."""
+    for c in cands:
+        c.corrected_s_per_element = correction.corrected(
+            c.predicted_s_per_element
+        )
+    cands.sort(
+        key=lambda c: (
+            not c.plan.feasible,
+            (c.measured_s_per_element
+             if c.measured_s_per_element is not None
+             else c.corrected_s_per_element),
+            c.plan.resident_bytes,
+        )
+    )
+    return cands
 
 
 def explore(
@@ -219,14 +289,22 @@ def explore(
     measure_top: int = 0,
     measure_batches: int = 4,
     operator_name: Optional[str] = None,
+    calibrate: bool = False,
 ) -> List[Candidate]:
     """Sweep the design space; return candidates ranked best-first.
 
     Infeasible plans rank after all feasible ones (kept for the report).
     ``measure_top`` verifies the k best measurable candidates against the
     real simulation driver and stores seconds/element alongside the
-    prediction.
+    prediction.  ``calibrate`` additionally fits the measured-feedback
+    :class:`CostCorrection` from those runs and re-ranks every candidate
+    by its corrected prediction (the paper's predict-then-build loop).
     """
+    if calibrate and not measure_top:
+        raise ValueError(
+            "calibrate=True fits the correction from measured runs; "
+            "set measure_top > 0"
+        )
     target = target if target is not None else detect_target()
     space = space or DesignSpace()
     prog, name = _resolve_program(p_or_prog, operator_name)
@@ -277,6 +355,148 @@ def explore(
             cands, p_or_prog, measure_top, n_eq=n_eq,
             max_batches=measure_batches,
         )
+        if calibrate:
+            apply_correction(cands, fit_correction(cands))
+    return cands
+
+
+# ---------------------------------------------------------------------------
+# chain exploration (multi-operator programs)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ChainDesignSpace:
+    """Sweep axes for a ProgramChain: per-stage backends are crossed
+    (every combination up to ``max_backend_combos``), E divisors divide
+    the co-sized chain E, and each prefetch depth applies chain-wide."""
+
+    backends: Tuple[str, ...] = ("xla", "staged")
+    policies: Tuple[str, ...] = ("float32",)
+    batch_divisors: Tuple[int, ...] = (1, 2, 4)
+    prefetch_depths: Tuple[int, ...] = (0, 1, 2)
+    cu_counts: Tuple[int, ...] = (1,)
+    max_backend_combos: int = 16
+
+
+@dataclasses.dataclass
+class ChainCandidate:
+    """One explored chain design point (ranked like Candidate; the
+    ``plan`` attribute makes :func:`pareto_front` work unchanged)."""
+
+    plan: "chain_mod.ChainPlan"
+    predicted_s_per_element: float
+    measured_s_per_element: Optional[float] = None
+
+    @property
+    def verified(self) -> bool:
+        return self.measured_s_per_element is not None
+
+
+def measure_chain_plan(
+    chain: "chain_mod.ProgramChain",
+    plan: "chain_mod.ChainPlan",
+    *,
+    max_batches: int = 4,
+) -> Optional[float]:
+    """Verify a chain plan by running the real pipeline driver; seconds
+    per element.  Returns None when the plan is not runnable here (CU
+    count exceeds local devices, planned backends differ from how the
+    chain was compiled, or the runtime rejects it)."""
+    import jax
+
+    from ..cfd.simulation import run_chain  # lazy: no cycle
+
+    if plan.cu_count > len(jax.devices()):
+        return None
+    compiled_backends = tuple(s.backend for s in chain.stages)
+    if tuple(sp.backend for sp in plan.stages) != compiled_backends:
+        return None  # would measure a different program than planned
+    try:
+        run_chain(chain, plan, max_batches=1)  # warm compile
+        res = run_chain(chain, plan, max_batches=max_batches)
+    except Exception:
+        return None
+    return res.wall_s / res.elements if res.elements else None
+
+
+def explore_chain(
+    chain: "chain_mod.ProgramChain",
+    *,
+    target: Optional[MemoryTarget] = None,
+    n_eq: int = 1 << 16,
+    space: Optional[ChainDesignSpace] = None,
+    measure_top: int = 0,
+    measure_batches: int = 4,
+) -> List[ChainCandidate]:
+    """Sweep chain plans: per-stage backend combinations and prefetch
+    depth under one shared (divisor-scaled) E.  Ranked best-first with
+    infeasible plans last, exactly like :func:`explore`.
+
+    ``measure_top`` verifies the k best feasible candidates whose
+    planned backends match the chain's compiled ones by running the real
+    ``run_chain`` driver (others cannot be measured as-planned)."""
+    import itertools
+
+    from . import chain as chain_mod  # local: chain imports predict_cost
+
+    target = target if target is not None else detect_target()
+    space = space or ChainDesignSpace()
+    n_stages = len(chain.stages)
+
+    combos = list(
+        itertools.islice(
+            itertools.product(space.backends, repeat=n_stages),
+            space.max_backend_combos,
+        )
+    )
+    sched_cache: Dict = {}  # (stage idx, bps) -> Schedule, shared by all points
+    cands: List[ChainCandidate] = []
+    for policy in space.policies:
+        bps = POLICIES[policy].bits // 8
+        auto_e = chain.auto_batch_elements(
+            target, bytes_per_scalar=bps, n_eq=n_eq
+        )
+        e_cands = sorted({max(1, auto_e // d) for d in space.batch_divisors})
+        for backends in combos:
+            for e in e_cands:
+                for depth in space.prefetch_depths:
+                    for cu in space.cu_counts:
+                        plan = chain_mod.plan_chain(
+                            chain, target=target, policy=policy,
+                            backends=backends, batch_elements=e,
+                            prefetch_depth=depth, cu_count=cu, n_eq=n_eq,
+                            _sched_cache=sched_cache,
+                        )
+                        cands.append(
+                            ChainCandidate(
+                                plan=plan,
+                                predicted_s_per_element=(
+                                    plan.cost.t_pipelined
+                                    / plan.batch_elements
+                                ),
+                            )
+                        )
+    cands.sort(
+        key=lambda c: (
+            not c.plan.feasible,
+            c.predicted_s_per_element,
+            c.plan.resident_bytes,
+        )
+    )
+    if measure_top:
+        measured = 0
+        for c in cands:
+            if measured >= measure_top:
+                break
+            if not c.plan.feasible:
+                continue
+            got = measure_chain_plan(
+                chain, c.plan, max_batches=measure_batches
+            )
+            if got is not None:
+                c.measured_s_per_element = got
+                measured += 1
     return cands
 
 

@@ -14,6 +14,13 @@ Performs the paper's section-3 sizing decisions explicitly:
     of hardcoded in the driver.
   * **channel assignment** -- round-robin placement of every replica
     (ping/pong copies for a K-deep prefetch) over the pseudo-channels.
+  * **VMEM block sizing** -- the largest per-dispatch element block whose
+    working set fits the target's on-chip memory, which is what drives
+    the Pallas kernel's ``block_elements`` (the paper's PLM sizing).
+
+``ProgramChain`` planning (``memory.chain``) reuses these primitives with
+a shared :class:`ChannelAllocator` so all stages of a multi-operator
+program place their buffers without conflicts.
 """
 from __future__ import annotations
 
@@ -66,10 +73,13 @@ def auto_batch_elements(
     return int(e)
 
 
-class _ChannelAllocator:
+class ChannelAllocator:
     """Round-robin pseudo-channel assignment (Fig. 14's array->channel
     map).  A buffer spanning more channels than exist wraps -- capacity
-    feasibility is checked globally by the DSE, not here."""
+    feasibility is checked globally by the DSE, not here.  One take never
+    repeats a channel (no double-booking within one replica set); chain
+    planning shares a single allocator across all stages so no two
+    stages' hot streams pile onto channel 0."""
 
     def __init__(self, n_channels: int):
         self.n = n_channels
@@ -80,6 +90,35 @@ class _ChannelAllocator:
         ids = tuple((self.next + i) % self.n for i in range(min(count, self.n)))
         self.next = (self.next + count) % self.n
         return ids
+
+
+#: Backwards-compatible alias (pre-chain name).
+_ChannelAllocator = ChannelAllocator
+
+
+def make_buffer(
+    name: str,
+    node: ir.Node,
+    role: str,
+    replicas: int,
+    *,
+    target: MemoryTarget,
+    bytes_per_scalar: int,
+    batch_elements: int,
+    alloc: ChannelAllocator,
+    group: str = "",
+) -> BufferSpec:
+    """Size, pad, and channel-assign one stream (shared by single-program
+    and chain planning)."""
+    eb = node.size * bytes_per_scalar
+    pb = pad_to_burst(eb, target)
+    bb = pb * batch_elements if role != "shared" else pb
+    ch = alloc.take(replicas * channels_for(bb, target))
+    return BufferSpec(
+        name=name, role=role, shape=tuple(node.shape),
+        element_bytes=eb, padded_bytes=pb, batch_bytes=bb,
+        replicas=replicas, channels=ch, group=group,
+    )
 
 
 def build_buffers(
@@ -93,7 +132,7 @@ def build_buffers(
 ) -> Tuple[BufferSpec, ...]:
     """Assign every stream of the program to sized, channel-mapped buffers."""
     ins, outs, shared = element_streams(prog)
-    alloc = _ChannelAllocator(target.n_channels)
+    alloc = ChannelAllocator(target.n_channels)
     bufs: List[BufferSpec] = []
 
     # K-deep prefetch keeps K staged batches, one computing, and -- since
@@ -105,15 +144,11 @@ def build_buffers(
     out_replicas = 2 if prefetch_depth > 0 else 1  # result drains while next computes
 
     def add(name, node, role, replicas, group=""):
-        eb = node.size * bytes_per_scalar
-        pb = pad_to_burst(eb, target)
-        bb = pb * batch_elements if role != "shared" else pb
-        ch = alloc.take(replicas * channels_for(bb, target))
         bufs.append(
-            BufferSpec(
-                name=name, role=role, shape=tuple(node.shape),
-                element_bytes=eb, padded_bytes=pb, batch_bytes=bb,
-                replicas=replicas, channels=ch, group=group,
+            make_buffer(
+                name, node, role, replicas, target=target,
+                bytes_per_scalar=bytes_per_scalar,
+                batch_elements=batch_elements, alloc=alloc, group=group,
             )
         )
 
@@ -136,3 +171,62 @@ def build_buffers(
             for i, node in enumerate(streamed):
                 add(f"{g.name}.s{i}", node, "inter", 1, group=g.name)
     return tuple(bufs)
+
+
+# ---------------------------------------------------------------------------
+# on-chip (VMEM / PLM) block sizing -- what drives the Pallas kernel's
+# block_elements (the paper sizes its PLM buffers the same way)
+# ---------------------------------------------------------------------------
+
+
+def block_working_set_bytes(
+    prog: ir.Program, block_elements: int, *, bytes_per_scalar: int
+) -> int:
+    """On-chip bytes while one element block flows through the fused
+    kernel: every element stream's block slice, double-buffered scratch
+    for the largest intermediate (Mnemosyne-style t/r sharing keeps two
+    live), plus the batch-invariant operands held resident."""
+    ins, outs, shared = element_streams(prog)
+    elem = sum(v.size for _, v in ins + outs)
+    scratch = 2 * max(
+        (n.size for n in prog.toposort() if not isinstance(n, ir.Input)),
+        default=0,
+    )
+    shared_b = sum(v.size for _, v in shared)
+    return (shared_b + block_elements * (elem + scratch)) * bytes_per_scalar
+
+
+def vmem_block_elements(
+    prog: ir.Program,
+    target: MemoryTarget,
+    *,
+    bytes_per_scalar: int,
+    reserve_fraction: float = 0.5,
+) -> int:
+    """Largest power-of-two element block whose working set fits the
+    target's on-chip memory (half is reserved for the grid pipeline's
+    DMA double buffering, mirroring ``core.schedule``'s VMEM budget)."""
+    budget = int(target.vmem_bytes * reserve_fraction)
+    be = 1
+    while block_working_set_bytes(
+        prog, be * 2, bytes_per_scalar=bytes_per_scalar
+    ) <= budget:
+        be *= 2
+    return be
+
+
+def largest_divisor_leq(n: int, bound: int) -> int:
+    """Largest divisor of ``n`` that is <= ``bound`` (>= 1).  Pallas grids
+    require block_elements to divide the batch, so the VMEM-derived block
+    is snapped to the nearest feasible divisor of E."""
+    n, bound = max(1, n), max(1, bound)
+    best = 1
+    d = 1
+    while d * d <= n:
+        if n % d == 0:
+            if d <= bound:
+                best = max(best, d)
+            if n // d <= bound:
+                best = max(best, n // d)
+        d += 1
+    return best

@@ -22,12 +22,14 @@ def host_stream_bytes(buffers: Iterable["BufferSpec"]) -> int:
 
 def hbm_stream_bytes(buffers: Iterable["BufferSpec"]) -> int:
     """Device-memory traffic per batch: every stream crosses HBM once;
-    stage intermediates cross twice (write + read back)."""
+    stage intermediates and chain-resident streams cross twice (the
+    producer writes, the consumer reads back) -- but never the host
+    link."""
     total = 0
     for b in buffers:
         if b.role in ("in", "out"):
             total += b.batch_bytes
-        elif b.role == "inter":
+        elif b.role in ("inter", "resident"):
             total += 2 * b.batch_bytes
     return total
 
@@ -54,6 +56,10 @@ class BufferSpec:
                       resident once.
       * ``inter``  -- scheduled-group intermediate (staged backend): an
                       HBM round-trip between dataflow stages.
+      * ``resident`` -- chain stream (``memory.chain``): a producer
+                      stage's output consumed by a later stage of the
+                      same ProgramChain.  It stays in HBM -- written once,
+                      read once, never crossing the host link.
     """
 
     name: str
@@ -118,6 +124,10 @@ class MemoryPlan:
     feasible: bool = True
     infeasible_reason: str = ""
     flops_per_element: int = 0
+    #: largest element block whose fused-kernel working set fits on-chip
+    #: memory (drives the Pallas kernel's ``block_elements``); divides E.
+    block_elements: int = 0
+    block_working_set_bytes: int = 0
 
     # -- aggregates ---------------------------------------------------------
     @property
@@ -168,6 +178,14 @@ class MemoryPlan:
             f"of {t.usable_hbm_bytes / mib:.0f} MiB usable",
             f"  host stream {self.host_stream_bytes / mib:.1f} MiB/batch   "
             f"hbm traffic {self.hbm_stream_bytes / mib:.1f} MiB/batch",
+        ]
+        if self.block_elements:
+            lines.append(
+                f"  vmem block BE={self.block_elements} elements   "
+                f"working set {self.block_working_set_bytes / mib:.2f} MiB "
+                f"of {t.vmem_bytes / mib:.0f} MiB VMEM"
+            )
+        lines += [
             "",
             f"  {'buffer':<14} {'role':<7} {'elem B':>7} {'padded':>7} "
             f"{'batch MiB':>10} {'repl':>5}  channels",

@@ -1,0 +1,404 @@
+"""Multi-operator chain planning + the run_chain driver: residency,
+co-sized E, conflict-free placement, bitwise equivalence with the
+unchained reference, and the plan-driven Pallas block size."""
+import numpy as np
+import pytest
+
+from repro.cfd import operators, simulation
+from repro.memory import chain as mchain
+from repro.memory import channels, dse, layout
+
+
+@pytest.fixture(scope="module")
+def cfd_chain():
+    return operators.build_cfd_chain(5)
+
+
+def _chain_inputs(chain, n, p, rng):
+    inputs = {
+        "interp.u": rng.uniform(-1, 1, (n, p, p, p)).astype(np.float32),
+        "helmholtz.D": rng.uniform(-1, 1, (n, p, p, p)).astype(np.float32),
+    }
+    shared = {
+        name: rng.uniform(-1, 1, node.shape).astype(np.float32)
+        for name, node in sorted(chain.shared_operands().items())
+    }
+    return inputs, shared
+
+
+# ---------------------------------------------------------------------------
+# chain structure
+# ---------------------------------------------------------------------------
+
+
+def test_chain_structure(cfd_chain):
+    ch = cfd_chain
+    assert ch.name == "interp->grad->helmholtz"
+    # bound streams: interp.v -> grad.u, grad.gx -> helmholtz.u
+    assert ch.resolved[1] == {"u": (0, "v")}
+    assert ch.resolved[2] == {"u": (1, "gx")}
+    assert [n for n, _ in ch.resident_outputs(0)] == ["v"]
+    assert [n for n, _ in ch.resident_outputs(1)] == ["gx"]
+    # fringe: only unbound element vars touch the host
+    assert [n for n, _ in ch.host_element_inputs(0)] == ["u"]
+    assert [n for n, _ in ch.host_element_inputs(1)] == []
+    assert [n for n, _ in ch.host_element_inputs(2)] == ["D"]
+    assert [n for n, _ in ch.chain_outputs(1)] == ["gy", "gz"]
+    assert [n for n, _ in ch.chain_outputs(2)] == ["v"]
+    assert sorted(ch.shared_operands()) == ["A", "Dx", "Dy", "Dz", "S"]
+
+
+def test_chain_rejects_bad_bindings():
+    interp = operators.build_interpolation(5, 5)
+    helm = operators.build_inverse_helmholtz(7)  # shape mismatch vs p=5
+    with pytest.raises(mchain.ChainError):
+        mchain.ProgramChain([
+            ("a", interp), ("b", helm, {"u": "a.v"}),
+        ])
+    with pytest.raises(mchain.ChainError):
+        mchain.ProgramChain([
+            ("a", interp), ("b", interp, {"u": "nosuch.v"}),
+        ])
+    with pytest.raises(mchain.ChainError):  # unqualified binding
+        mchain.ProgramChain([
+            ("a", interp), ("b", interp, {"u": "v"}),
+        ])
+    with pytest.raises(mchain.ChainError):  # duplicate stage names
+        mchain.ProgramChain([("a", interp), ("a", interp)])
+
+
+def test_chain_auto_binding_by_name():
+    """An input named like an earlier output binds without an explicit
+    bindings entry (most recent producer wins)."""
+    a = operators.build_interpolation(5, 5)  # u -> v
+    b = operators.build_inverse_helmholtz(5)  # u, D -> v ... no 'v' input
+    # gradient consumes 'u'; interpolation produces 'v' -- no auto-bind
+    chain = mchain.ProgramChain([("s0", a), ("s1", b)])
+    assert chain.resolved[1] == {}  # nothing matched by name
+    # a second interpolation re-consuming 'u' does NOT bind to s0's 'v'
+    chain2 = mchain.ProgramChain([("s0", a), ("s1", a)])
+    assert chain2.resolved[1] == {}
+
+
+# ---------------------------------------------------------------------------
+# chain plan: residency, E co-sizing, placement
+# ---------------------------------------------------------------------------
+
+
+def test_chain_plan_fewer_host_bytes_than_standalone(cfd_chain):
+    """Acceptance: the chain plan's host-stream bytes are strictly fewer
+    than the sum of the three standalone plans at the same E."""
+    E = 128
+    t = channels.ALVEO_U280
+    plan = mchain.plan_chain(cfd_chain, target=t, batch_elements=E)
+    standalone = sum(
+        dse.make_plan(
+            s.program, target=t, batch_elements=E, operator_name=s.name
+        ).host_stream_bytes
+        for s in cfd_chain.stages
+    )
+    assert plan.host_stream_bytes < standalone
+    # exactly the bound streams stay resident: interp.v and grad.gx,
+    # each saving one host write + one host read
+    resident = [b for b in plan.buffers if b.role == "resident"]
+    assert sorted(b.name for b in resident) == ["grad.gx", "interp.v"]
+    assert standalone - plan.host_stream_bytes == 2 * sum(
+        b.batch_bytes for b in resident
+    )
+    assert plan.resident_stream_bytes == sum(b.batch_bytes for b in resident)
+
+
+def test_chain_cosized_e_fits_every_stage(cfd_chain):
+    """The shared E satisfies the channel rule for each stage, and at
+    least one stage is tight (E is maximal)."""
+    t = channels.ALVEO_U280
+    plan = mchain.plan_chain(cfd_chain, target=t)
+    e = plan.batch_elements
+    tight = False
+    for i in range(len(cfd_chain.stages)):
+        per = cfd_chain.stage_stream_bytes_per_element(i, 4)
+        assert e * per <= t.channel_bytes
+        if (e + 1) * per > t.channel_bytes:
+            tight = True
+    assert tight
+
+
+def test_chain_placement_no_conflicts(cfd_chain):
+    """No channel double-booked within a replica set; shared operands
+    placed exactly once chain-wide."""
+    plan = mchain.plan_chain(
+        cfd_chain, target=channels.ALVEO_U280, batch_elements=256
+    )
+    names = [b.name for b in plan.buffers]
+    assert len(names) == len(set(names))
+    for b in plan.buffers:
+        assert len(b.channels) == len(set(b.channels))
+    shared = [b for b in plan.buffers if b.role == "shared"]
+    assert sorted(b.name for b in shared) == ["A", "Dx", "Dy", "Dz", "S"]
+    # consecutive buffers round-robin instead of piling on channel 0
+    first_channels = [b.channels[0] for b in plan.buffers]
+    assert len(set(first_channels)) > 1
+
+
+def test_chain_plan_determinism_and_report(cfd_chain):
+    kw = dict(target=channels.ALVEO_U280, batch_elements=128, n_eq=1024)
+    a = mchain.plan_chain(cfd_chain, **kw)
+    b = mchain.plan_chain(cfd_chain, **kw)
+    assert a == b
+    assert a.report() == b.report()
+    rep = a.report()
+    assert "ChainPlan interp->grad->helmholtz" in rep
+    assert "resident" in rep and "stage helmholtz" in rep
+
+
+def test_chain_infeasible_reported(cfd_chain):
+    tiny = channels.ALVEO_U280.with_(hbm_bytes=2 ** 20, n_channels=4)
+    plan = mchain.plan_chain(cfd_chain, target=tiny, batch_elements=4096)
+    assert not plan.feasible
+    assert "exceeds" in plan.infeasible_reason
+    assert "NO" in plan.report()
+
+
+def test_chain_per_stage_depths_and_backends(cfd_chain):
+    plan = mchain.plan_chain(
+        cfd_chain, target=channels.ALVEO_U280, batch_elements=64,
+        backends=("xla", "staged", "staged"), prefetch_depth=(0, 1, 2),
+    )
+    assert [sp.backend for sp in plan.stages] == ["xla", "staged", "staged"]
+    assert [sp.prefetch_depth for sp in plan.stages] == [0, 1, 2]
+    # the staged Helmholtz exposes its group-boundary intermediates (the
+    # gradient's groups all end at program outputs, so it has none)
+    assert any(
+        b.role == "inter" for b in plan.stages[2].buffers
+    )
+
+
+# ---------------------------------------------------------------------------
+# run_chain: the whole pipeline off one plan
+# ---------------------------------------------------------------------------
+
+
+def test_run_chain_bitwise_matches_unchained(cfd_chain, rng):
+    """Acceptance: chained execution (intermediates resident on device)
+    is bitwise-identical at float32 to running the three compiled
+    operators separately with host round-trips between them."""
+    p, E, n_b = 5, 16, 3
+    n = E * n_b
+    chain = cfd_chain
+    inputs, shared = _chain_inputs(chain, n, p, rng)
+    plan = mchain.plan_chain(
+        chain, target=channels.CPU_HOST, batch_elements=E, n_eq=n,
+        prefetch_depth=2,
+    )
+    res = simulation.run_chain(
+        chain, plan, inputs=inputs, shared=shared, collect_outputs=True
+    )
+    assert res.batches == n_b and res.elements == n
+
+    interp, grad, helm = (s.compiled for s in chain.stages)
+    ref = {"grad.gy": [], "grad.gz": [], "helmholtz.v": []}
+    for b in range(n_b):
+        sl = slice(b * E, (b + 1) * E)
+        v = np.asarray(interp.batched_fn(
+            {"A": shared["A"], "u": inputs["interp.u"][sl]})["v"])
+        g = grad.batched_fn({
+            "Dx": shared["Dx"], "Dy": shared["Dy"], "Dz": shared["Dz"],
+            "u": v,
+        })
+        ref["grad.gy"].append(np.asarray(g["gy"]))
+        ref["grad.gz"].append(np.asarray(g["gz"]))
+        hv = helm.batched_fn({
+            "S": shared["S"], "D": inputs["helmholtz.D"][sl],
+            "u": np.asarray(g["gx"]),
+        })["v"]
+        ref["helmholtz.v"].append(np.asarray(hv))
+    for q in ref:
+        want = np.concatenate(ref[q])
+        assert want.dtype == res.outputs[q].dtype == np.float32
+        assert np.array_equal(want, res.outputs[q]), q
+
+
+def test_run_chain_checksums_invariant_to_prefetch(cfd_chain, rng):
+    p, E, n_b = 5, 8, 3
+    inputs, shared = _chain_inputs(cfd_chain, E * n_b, p, rng)
+    sums = {}
+    for depth in (0, 2):
+        plan = mchain.plan_chain(
+            cfd_chain, target=channels.CPU_HOST, batch_elements=E,
+            prefetch_depth=depth, n_eq=E * n_b,
+        )
+        res = simulation.run_chain(
+            cfd_chain, plan, inputs=inputs, shared=shared
+        )
+        sums[depth] = res.checksums
+    assert sums[0].keys() == sums[2].keys()
+    for q in sums[0]:
+        assert sums[0][q] == pytest.approx(sums[2][q], abs=1e-5)
+
+
+def test_run_chain_warns_on_backend_mismatch(cfd_chain, rng):
+    """A plan for backends the chain was not compiled with still runs
+    (numerically identical programs) but flags the misattribution."""
+    p, E = 5, 8
+    inputs, shared = _chain_inputs(cfd_chain, E, p, rng)
+    plan = mchain.plan_chain(
+        cfd_chain, target=channels.CPU_HOST, batch_elements=E,
+        backends=("xla", "staged", "xla"), n_eq=E,
+    )
+    with pytest.warns(RuntimeWarning, match="differ from the compiled"):
+        simulation.run_chain(cfd_chain, plan, inputs=inputs, shared=shared)
+
+
+def test_run_chain_auto_plans_when_missing(cfd_chain):
+    res = simulation.run_chain(cfd_chain, n_eq=64, max_batches=2)
+    assert res.plan is not None
+    assert res.plan.batch_elements >= 1
+    assert set(res.checksums) == {"grad.gy", "grad.gz", "helmholtz.v"}
+    assert all(np.isfinite(v) for v in res.checksums.values())
+
+
+def test_run_chain_auto_e_bounded_by_inputs(cfd_chain, rng):
+    """Regression: with inputs but no n_eq, the auto-sized E is capped
+    by the data so the element accounting is honest."""
+    p, n = 5, 48
+    inputs, shared = _chain_inputs(cfd_chain, n, p, rng)
+    res = simulation.run_chain(cfd_chain, inputs=inputs, shared=shared)
+    assert res.plan.batch_elements <= n
+    assert res.elements == res.batches * res.plan.batch_elements <= n
+    # an explicitly oversized plan is rejected rather than silently
+    # computing on fewer elements than it reports
+    big = mchain.plan_chain(
+        cfd_chain, target=channels.CPU_HOST, batch_elements=4 * n
+    )
+    with pytest.raises(ValueError, match="exceeds the provided input"):
+        simulation.run_chain(cfd_chain, big, inputs=inputs, shared=shared)
+    # an oversized n_eq is clamped to the data instead of running empty
+    # batches past the arrays' end
+    small = mchain.plan_chain(
+        cfd_chain, target=channels.CPU_HOST, batch_elements=16, n_eq=n
+    )
+    res = simulation.run_chain(
+        cfd_chain, small, inputs=inputs, shared=shared, n_eq=16 * n
+    )
+    assert res.elements <= n
+
+
+def test_plan_infeasible_when_block_floor_exceeds_vmem():
+    """Even the BE=1 block must fit on-chip, or the plan says so."""
+    tiny = channels.ALVEO_U280.with_(vmem_bytes=8192)
+    plan = dse.make_plan(11, target=tiny, batch_elements=64)
+    assert not plan.feasible
+    assert "block working set" in plan.infeasible_reason
+    chain_plan = mchain.plan_chain(
+        operators.build_cfd_chain(11), target=tiny, batch_elements=64
+    )
+    assert not chain_plan.feasible
+    assert "block working set" in chain_plan.infeasible_reason
+
+
+# ---------------------------------------------------------------------------
+# VMEM-budgeted Pallas block
+# ---------------------------------------------------------------------------
+
+
+def test_plan_block_elements_fits_vmem():
+    """Acceptance: the plan-chosen Pallas block's working set fits the
+    target's VMEM, divides E, and shows up in the report."""
+    t = channels.TPU_V5E
+    plan = dse.make_plan(
+        11, target=t, backend="pallas", batch_elements=4096
+    )
+    assert plan.block_elements > 1
+    assert plan.batch_elements % plan.block_elements == 0
+    assert plan.block_working_set_bytes <= t.vmem_bytes
+    assert f"vmem block BE={plan.block_elements}" in plan.report()
+    # maximal: the next power of two would blow the reserve budget
+    from repro.kernels.helmholtz import ops as hops
+    assert hops.block_working_set_bytes(
+        11, plan.block_elements
+    ) == plan.block_working_set_bytes
+    bigger = min(plan.block_elements * 2, plan.batch_elements)
+    if bigger > plan.block_elements:
+        assert hops.block_working_set_bytes(11, bigger) > t.vmem_bytes // 2
+
+
+def test_pallas_block_resolution_prefers_plan():
+    plan = dse.make_plan(
+        5, target=channels.TPU_V5E, backend="pallas", batch_elements=1024
+    )
+    assert operators.pallas_block_elements(5, plan) == plan.block_elements
+    assert operators.pallas_block_elements(
+        5, None, vmem_bytes=channels.TPU_V5E.vmem_bytes
+    ) >= plan.block_elements  # unconstrained by E divisibility
+    from repro.kernels.helmholtz.ops import DEFAULT_BLOCK_ELEMENTS
+    assert operators.pallas_block_elements(5) == DEFAULT_BLOCK_ELEMENTS
+
+
+def test_pallas_backend_runs_with_plan_block(rng):
+    """The plan-driven block produces correct results through the
+    compiled pallas path (interpret mode on CPU)."""
+    p, E = 5, 8
+    plan = dse.make_plan(
+        p, target=channels.CPU_HOST, backend="pallas", batch_elements=E
+    )
+    assert plan.block_elements >= 1
+    assert E % plan.block_elements == 0
+    from repro.kernels.helmholtz import ops as hops
+    impl = hops.make_pallas_impl(
+        impl="interpret", block_elements=plan.block_elements
+    )
+    S = rng.uniform(-1, 1, (p, p)).astype(np.float32)
+    D = rng.uniform(-1, 1, (E, p, p, p)).astype(np.float32)
+    u = rng.uniform(-1, 1, (E, p, p, p)).astype(np.float32)
+    got = np.asarray(impl({"S": S, "D": D, "u": u})["v"])
+    ref = operators.build_inverse_helmholtz(p)
+    want = np.asarray(ref.batched_fn({"S": S, "D": D, "u": u})["v"])
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_chain_plan_block_reaches_pallas_stage(monkeypatch):
+    """Regression: rebuilding the chain with its ChainPlan threads the
+    plan's per-stage VMEM block into the Pallas Helmholtz kernel (the
+    compiled-before-planning chain cannot know it)."""
+    p, E = 5, 192  # not divisible by the kernel default of 128
+    plan_only = operators.build_cfd_chain(p)
+    plan = mchain.plan_chain(
+        plan_only, target=channels.TPU_V5E, batch_elements=E,
+        backends=("xla", "xla", "pallas"),
+    )
+    blk = operators.chain_stage_block_elements(plan, "helmholtz")
+    assert blk == plan.stages[2].block_elements
+    assert blk is not None and E % blk == 0
+    assert operators.chain_stage_block_elements(plan, "nosuch") is None
+    assert operators.chain_stage_block_elements(None, "helmholtz") is None
+
+    seen = {}
+    from repro.kernels.helmholtz import ops as hops
+    real = hops.make_pallas_impl
+
+    def spy(impl="auto", block_elements=hops.DEFAULT_BLOCK_ELEMENTS):
+        seen["block_elements"] = block_elements
+        return real(impl=impl, block_elements=block_elements)
+
+    monkeypatch.setattr(
+        "repro.cfd.operators.helmholtz_ops.make_pallas_impl", spy
+    )
+    operators.build_cfd_chain(
+        p, backends=("xla", "xla", "pallas"), chain_plan=plan
+    )
+    assert seen["block_elements"] == blk
+
+
+def test_layout_vmem_block_matches_kernel_formula():
+    """memory.layout's generic block working set agrees with the
+    Helmholtz kernel's closed form, so the plan and the kernel can
+    never disagree about what fits."""
+    from repro.core import dsl, rewrite
+    from repro.kernels.helmholtz import ops as hops
+
+    for p in (5, 7, 11):
+        prog = rewrite.optimize(dsl.inverse_helmholtz_program(p))
+        for be in (1, 8, 64):
+            assert layout.block_working_set_bytes(
+                prog, be, bytes_per_scalar=4
+            ) == hops.block_working_set_bytes(p, be)

@@ -1,0 +1,234 @@
+"""DSE coverage: predict_cost monotonicity, pareto_front semantics, the
+measured-feedback CostCorrection, and explore-with-measurement smokes
+(single-op and chain)."""
+import dataclasses
+
+import pytest
+
+from repro.cfd import operators
+from repro.memory import channels, dse
+
+
+BASE = dict(
+    policy="float32", batch_elements=1024, flops_per_element=20_000,
+    host_bytes=8 << 20, hbm_bytes=8 << 20, channels_used=4,
+    prefetch_depth=1, cu_count=1,
+)
+
+
+def _cost(**over):
+    kw = {**BASE, **over}
+    return dse.predict_cost(channels.ALVEO_U280, **kw)
+
+
+# ---------------------------------------------------------------------------
+# predict_cost monotonicity (the model's core guarantee)
+# ---------------------------------------------------------------------------
+
+
+def test_predict_cost_monotone_in_channels():
+    """More assigned pseudo-channels never predicts slower (the paper's
+    point: unmapped channels are wasted bandwidth)."""
+    t = channels.ALVEO_U280
+    prev = None
+    for ch in range(1, t.n_channels + 1):
+        c = _cost(channels_used=ch)
+        if prev is not None:
+            assert c.t_hbm <= prev.t_hbm * (1 + 1e-12)
+            assert c.t_pipelined <= prev.t_pipelined * (1 + 1e-12)
+            assert c.t_serial <= prev.t_serial * (1 + 1e-12)
+        prev = c
+    # beyond the physical channel count, bandwidth stops improving
+    assert _cost(channels_used=t.n_channels + 8).t_hbm == pytest.approx(
+        _cost(channels_used=t.n_channels).t_hbm
+    )
+
+
+def test_predict_cost_monotone_in_prefetch_depth():
+    """Deeper K never predicts slower under the steady-state model (no
+    n_batches => no pipeline-fill term)."""
+    prev = None
+    for k in (0, 1, 2, 4, 8):
+        c = _cost(prefetch_depth=k)
+        if prev is not None:
+            assert c.t_pipelined <= prev.t_pipelined * (1 + 1e-12)
+        prev = c
+
+
+def test_predict_cost_fill_term_bounded():
+    """With a finite batch count the K-deep fill cost is charged, but
+    never exceeds the available batches (K >= n_batches saturates)."""
+    deep = _cost(prefetch_depth=16, n_batches=4)
+    deeper = _cost(prefetch_depth=64, n_batches=4)
+    assert deep.t_pipelined == pytest.approx(deeper.t_pipelined)
+    nofill = _cost(prefetch_depth=1)
+    assert _cost(prefetch_depth=1, n_batches=4).t_pipelined >= (
+        nofill.t_pipelined
+    )
+
+
+# ---------------------------------------------------------------------------
+# pareto_front
+# ---------------------------------------------------------------------------
+
+
+def test_pareto_front_on_explored_candidates():
+    cands = dse.explore(7, target=channels.ALVEO_U280, n_eq=1 << 14)
+    front = dse.pareto_front(cands)
+    assert front
+    feas = [c for c in cands if c.plan.feasible]
+    # the top-ranked feasible candidate is never dominated
+    assert any(f is feas[0] for f in front)
+    # no member dominates another
+    for a in front:
+        for b in front:
+            if a is b:
+                continue
+            dominates = (
+                a.predicted_s_per_element <= b.predicted_s_per_element
+                and a.plan.resident_bytes <= b.plan.resident_bytes
+                and (a.predicted_s_per_element < b.predicted_s_per_element
+                     or a.plan.resident_bytes < b.plan.resident_bytes)
+            )
+            assert not dominates
+    # every non-front feasible candidate is dominated by some front member
+    front_ids = {id(c) for c in front}
+    for c in feas:
+        if id(c) in front_ids:
+            continue
+        assert any(
+            f.predicted_s_per_element <= c.predicted_s_per_element
+            and f.plan.resident_bytes <= c.plan.resident_bytes
+            for f in front
+        )
+
+
+def test_pareto_front_excludes_infeasible():
+    cands = dse.explore(
+        11,
+        target=channels.ALVEO_U280.with_(hbm_bytes=2 ** 26, n_channels=4),
+        n_eq=1 << 16,
+    )
+    front = dse.pareto_front(cands)
+    assert all(c.plan.feasible for c in front)
+
+
+# ---------------------------------------------------------------------------
+# measured-feedback correction
+# ---------------------------------------------------------------------------
+
+
+def _measured_cand(pred, meas, feasible=True):
+    plan = dse.make_plan(5, target=channels.ALVEO_U280, batch_elements=64)
+    if not feasible:
+        plan = dataclasses.replace(plan, feasible=False)
+    return dse.Candidate(
+        plan=plan, predicted_s_per_element=pred,
+        measured_s_per_element=meas,
+    )
+
+
+def test_fit_correction_geometric_mean():
+    cands = [
+        _measured_cand(1e-6, 2e-6),   # ratio 2
+        _measured_cand(1e-6, 8e-6),   # ratio 8
+        _measured_cand(1e-6, None),   # unmeasured: ignored
+    ]
+    corr = dse.fit_correction(cands)
+    assert corr.n_samples == 2
+    assert corr.factor == pytest.approx(4.0)  # sqrt(2 * 8)
+    assert corr.corrected(1e-6) == pytest.approx(4e-6)
+
+
+def test_fit_correction_identity_without_measurements():
+    corr = dse.fit_correction([_measured_cand(1e-6, None)])
+    assert corr.factor == 1.0 and corr.n_samples == 0
+    assert corr.corrected(3.0) == 3.0
+
+
+def test_calibrate_requires_measurement():
+    with pytest.raises(ValueError, match="measure_top"):
+        dse.explore(5, target=channels.CPU_HOST, n_eq=64, calibrate=True)
+
+
+def test_apply_correction_reranks():
+    slow = _measured_cand(1e-6, 5e-6)       # measured: actually slow
+    fast = _measured_cand(2e-6, None)       # predicted-only
+    ranked = dse.apply_correction([slow, fast], dse.fit_correction([slow]))
+    # correction factor 5: fast's corrected prediction = 1e-5 > slow's
+    # measured 5e-6, so the measured candidate wins the re-rank
+    assert ranked[0] is slow
+    assert fast.corrected_s_per_element == pytest.approx(1e-5)
+
+
+@pytest.mark.slow
+def test_explore_calibrate_smoke():
+    """Measure-then-calibrate on a tiny program: every candidate gains a
+    corrected prediction and feasible candidates stay ranked first."""
+    space = dse.DesignSpace(
+        backends=("xla",), policies=("float32",), batch_divisors=(1, 2),
+        prefetch_depths=(0, 1), cu_counts=(1,),
+    )
+    cands = dse.explore(
+        5, target=channels.CPU_HOST, n_eq=128, space=space,
+        measure_top=1, measure_batches=2, calibrate=True,
+    )
+    assert any(c.verified for c in cands)
+    assert all(c.corrected_s_per_element is not None for c in cands)
+    feas = [c.plan.feasible for c in cands]
+    assert feas == sorted(feas, reverse=True)
+
+
+# ---------------------------------------------------------------------------
+# chain exploration
+# ---------------------------------------------------------------------------
+
+
+def test_explore_chain_ranked_and_pareto():
+    chain = operators.build_cfd_chain(5)
+    space = dse.ChainDesignSpace(
+        backends=("xla", "staged"), batch_divisors=(1, 2),
+        prefetch_depths=(0, 1),
+    )
+    cands = dse.explore_chain(
+        chain, target=channels.ALVEO_U280, n_eq=1 << 14, space=space
+    )
+    # 8 backend combos x 2 E x 2 K
+    assert len(cands) == 32
+    feas = [c for c in cands if c.plan.feasible]
+    assert feas
+    pred = [c.predicted_s_per_element for c in feas]
+    assert pred == sorted(pred)
+    assert all(c.plan.feasible for c in cands[: len(feas)])
+    # ChainPlan quacks enough like MemoryPlan for the same pareto code
+    front = dse.pareto_front(cands)
+    assert front and all(c.plan.feasible for c in front)
+    # per-stage backends really vary across the sweep
+    combos = {tuple(sp.backend for sp in c.plan.stages) for c in cands}
+    assert len(combos) == 8
+
+
+@pytest.mark.slow
+def test_explore_chain_measures_matching_candidates():
+    """measure_top verifies the best candidates whose planned backends
+    match how the chain was compiled, through the real run_chain."""
+    chain = operators.build_cfd_chain(5)
+    space = dse.ChainDesignSpace(
+        backends=("xla",), batch_divisors=(1,), prefetch_depths=(0, 1),
+    )
+    cands = dse.explore_chain(
+        chain, target=channels.CPU_HOST, n_eq=64, space=space,
+        measure_top=1, measure_batches=2,
+    )
+    assert any(c.verified for c in cands)
+    best = next(c for c in cands if c.verified)
+    assert best.measured_s_per_element > 0
+    # a plan whose backends differ from the compiled chain is refused
+    staged_plan = dse.explore_chain(
+        chain, target=channels.CPU_HOST, n_eq=64,
+        space=dse.ChainDesignSpace(
+            backends=("staged",), batch_divisors=(1,),
+            prefetch_depths=(0,),
+        ),
+    )[0].plan
+    assert dse.measure_chain_plan(chain, staged_plan) is None

@@ -1,0 +1,83 @@
+"""Golden-plan regression tests: rendered plan reports are checked in
+under tests/golden/ so any cost-model, layout, padding, or report drift
+shows up as a reviewable diff.  Regenerate intentionally with
+
+    REGEN_GOLDENS=1 PYTHONPATH=src python -m pytest tests/test_golden_plans.py
+
+All golden plans target the paper's fixed Alveo U280 datasheet, so they
+are machine-independent (pure-python planning, no jax numerics).
+"""
+import os
+import pathlib
+
+import pytest
+
+from repro.cfd import operators
+from repro.memory import chain as mchain
+from repro.memory import channels, dse
+
+GOLDEN_DIR = pathlib.Path(__file__).parent / "golden"
+
+
+def _check(name: str, rendered: str) -> None:
+    path = GOLDEN_DIR / name
+    if os.environ.get("REGEN_GOLDENS"):
+        GOLDEN_DIR.mkdir(exist_ok=True)
+        path.write_text(rendered + "\n")
+        pytest.skip(f"regenerated {name}")
+    assert path.exists(), (
+        f"golden file {name} missing -- run with REGEN_GOLDENS=1"
+    )
+    want = path.read_text().rstrip("\n")
+    got = rendered.rstrip("\n")
+    assert got == want, (
+        f"{name} drifted from the checked-in golden.\n"
+        "If the change is intentional, regenerate with REGEN_GOLDENS=1 "
+        "and review the diff.\n"
+        f"--- golden ---\n{want}\n--- current ---\n{got}"
+    )
+
+
+def test_golden_single_op_plan():
+    plan = dse.make_plan(
+        7, target=channels.ALVEO_U280, policy="float32",
+        prefetch_depth=1, n_eq=1 << 16,
+    )
+    _check("plan_helmholtz_p7_alveo.txt", plan.report())
+
+
+def test_golden_staged_plan():
+    plan = dse.make_plan(
+        7, target=channels.ALVEO_U280, policy="float32",
+        backend="staged", prefetch_depth=2, n_eq=1 << 16,
+    )
+    _check("plan_helmholtz_p7_staged_alveo.txt", plan.report())
+
+
+def test_golden_bf16_plan():
+    """Locks the policy-width threading: a bfloat16 plan's byte counts
+    are half the float32 plan's."""
+    plan = dse.make_plan(
+        7, target=channels.ALVEO_U280, policy="bfloat16",
+        prefetch_depth=1, n_eq=1 << 16,
+    )
+    _check("plan_helmholtz_p7_bf16_alveo.txt", plan.report())
+
+
+def test_golden_chain_plan():
+    chain = operators.build_cfd_chain(5)
+    plan = mchain.plan_chain(
+        chain, target=channels.ALVEO_U280, policy="float32",
+        batch_elements=512, prefetch_depth=1, n_eq=1 << 12,
+    )
+    _check("chain_cfd_p5_alveo.txt", plan.report())
+
+
+def test_golden_chain_mixed_backends():
+    chain = operators.build_cfd_chain(5)
+    plan = mchain.plan_chain(
+        chain, target=channels.ALVEO_U280, policy="float32",
+        backends=("xla", "xla", "staged"), batch_elements=256,
+        prefetch_depth=(1, 1, 2), n_eq=1 << 12,
+    )
+    _check("chain_cfd_p5_mixed_alveo.txt", plan.report())

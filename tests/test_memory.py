@@ -143,6 +143,7 @@ def test_explore_returns_ranked_set():
     assert set(id(c) for c in front) <= set(id(c) for c in cands)
 
 
+@pytest.mark.slow
 def test_explore_measures_top_candidate():
     space = dse.DesignSpace(
         backends=("xla",), policies=("float32",), batch_divisors=(1,),

@@ -78,3 +78,29 @@ def test_stream_bytes_accounting():
         assert len(g.out_streams) >= 1
     # last group streams the program output
     assert sch.groups[-1].out_streams[0].shape == (7, 7, 7)
+
+
+def test_stream_bytes_default_follows_policy_width():
+    """Regression: byte-count methods default to the scalar width the
+    schedule was built for, instead of a silent 4-byte assumption that
+    disagreed with low-precision policies."""
+    prog = _helmholtz(7)
+    for bps in (2, 4, 8):
+        sch = schedule.schedule(prog, bytes_per_scalar=bps)
+        assert sch.bytes_per_scalar == bps
+        assert sch.stream_bytes() == sch.stream_bytes(bps)
+        assert sch.stream_io_bytes() == sch.stream_io_bytes(bps)
+        for g in sch.groups:
+            assert g.bytes_per_scalar == bps
+            assert g.in_stream_bytes() == g.in_stream_bytes(bps)
+            assert g.out_stream_bytes() == g.out_stream_bytes(bps)
+            assert g.working_set() == g.working_set(bps)
+            # explicit widths still override the default
+            assert g.out_stream_bytes(1) * bps == g.out_stream_bytes(bps)
+    bf16 = schedule.schedule(prog, bytes_per_scalar=2)
+    f32 = schedule.schedule(prog, bytes_per_scalar=4)
+    assert all(
+        bf16.stream_bytes()[k] * 2 == f32.stream_bytes()[k]
+        for k in bf16.stream_bytes()
+    )
+    assert bf16.summary() != f32.summary()

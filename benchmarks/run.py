@@ -12,6 +12,9 @@
                    ProgramChain (inter-stage streams HBM-resident) vs
                    the unchained host-round-trip baseline; also writes
                    chain_ladder.json (CI uploads it as an artifact)
+  flow_ladder      the repro.flow acceptance ladder: hand stage cuts vs
+                   fully automatic source-to-system compilation; writes
+                   flow_ladder.json
   lm_throughput    framework health: LM train/decode throughput (smoke)
 
 Prints ``name,us_per_call,derived`` CSV rows (derived = GFLOPS under the
@@ -295,15 +298,15 @@ def chain_ladder() -> None:
 
     def unchained_batch(b):
         sl = slice(b * E, (b + 1) * E)
-        v = np.asarray(interp.batched_fn(
-            {"A": shared["A"], "u": inputs["interp.u"][sl]})["v"])
+        w = np.asarray(interp.batched_fn(
+            {"A": shared["A"], "u": inputs["interp.u"][sl]})["w"])
         g = grad.batched_fn({
             "Dx": shared["Dx"], "Dy": shared["Dy"], "Dz": shared["Dz"],
-            "u": np.asarray(v),
+            "w": np.asarray(w),
         })
         gx = np.asarray(g["gx"])
         out = helm.batched_fn({
-            "S": shared["S"], "D": inputs["helmholtz.D"][sl], "u": gx,
+            "S": shared["S"], "D": inputs["helmholtz.D"][sl], "gx": gx,
         })
         return float(jnp.sum(out["v"]))
 
@@ -365,6 +368,78 @@ def chain_ladder() -> None:
         }, f, indent=2)
 
 
+def flow_ladder() -> None:
+    """The tool-flow acceptance ladder: the same CFD pipeline compiled
+    (a) by hand-granularity stage cuts (``operators.build_cfd_chain``)
+    and (b) fully automatically from source by ``repro.flow`` (stages
+    derived from the scheduler's dataflow groups).  Rows report measured
+    us/batch for each; results land in ``flow_ladder.json`` (override
+    the path with $FLOW_LADDER_JSON)."""
+    import json
+    import os
+
+    from repro import flow
+    from repro.cfd.simulation import run_chain
+    from repro.memory import chain as mchain
+    from repro.memory import channels as mchan
+
+    p, E, n_b = 7, 256, 6
+    n_eq = E * n_b
+    target = mchan.detect_target()
+    rng = np.random.default_rng(11)
+    source = operators.CFD_PIPELINE_SRC.format(p=p)
+    shared_arrays = {
+        name: rng.uniform(-1, 1, (p, p)).astype(np.float32)
+        for name in ("A", "Dx", "Dy", "Dz", "S")
+    }
+    u = rng.uniform(-1, 1, (n_eq, p, p, p)).astype(np.float32)
+    D = rng.uniform(-1, 1, (n_eq, p, p, p)).astype(np.float32)
+    rows = []
+
+    def measure(name, chain, plan):
+        inputs = {}
+        for i, s in enumerate(chain.stages):
+            for in_name, _ in chain.host_element_inputs(i):
+                inputs[f"{s.name}.{in_name}"] = {"u": u, "D": D}[in_name]
+        flops_pe = sum(s.program.total_flops() for s in chain.stages)
+        run_chain(chain, plan, inputs=inputs, shared=shared_arrays,
+                  max_batches=2)  # warm
+        best = min(
+            (run_chain(chain, plan, inputs=inputs, shared=shared_arrays,
+                       n_eq=n_eq, max_batches=n_b) for _ in range(3)),
+            key=lambda r: r.wall_s,
+        )
+        us = best.wall_s / best.batches * 1e6
+        gflops = best.elements * flops_pe / best.wall_s / 1e9
+        _row(f"flow_ladder/{name}", us,
+             f"{gflops:.3f}GFLOPS;stages={len(chain.stages)};"
+             f"pred={plan.cost.t_pipelined * 1e6:.0f}us")
+        rows.append({
+            "name": name, "us_per_batch": us, "gflops": gflops,
+            "stages": len(chain.stages),
+            "host_stream_bytes": plan.host_stream_bytes,
+        })
+
+    hand = operators.build_cfd_chain(p)
+    hand_plan = mchain.plan_chain(
+        hand, target=target, batch_elements=E, prefetch_depth=1, n_eq=n_eq
+    )
+    measure("hand_stage_cuts", hand, hand_plan)
+
+    auto = flow.compile(
+        source, name=f"cfd_pipeline_p{p}", target=target,
+        batch_elements=E, prefetch_depth=1, n_eq=n_eq,
+    )
+    measure("flow_auto_stages", auto.chain, auto.plan)
+
+    path = os.environ.get("FLOW_LADDER_JSON", "flow_ladder.json")
+    with open(path, "w") as f:
+        json.dump({
+            "p": p, "E": E, "n_batches": n_b, "target": target.name,
+            "rows": rows,
+        }, f, indent=2)
+
+
 def lm_throughput() -> None:
     import repro.configs as configs
     from repro.models import build_model
@@ -410,6 +485,7 @@ BENCHES = {
     "fig19_kernels": fig19_kernels,
     "memplan_ladder": memplan_ladder,
     "chain_ladder": chain_ladder,
+    "flow_ladder": flow_ladder,
     "lm_throughput": lm_throughput,
 }
 

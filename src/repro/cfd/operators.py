@@ -1,13 +1,19 @@
 """The paper's three CFD operators, built through the DSL-to-executable
 flow (core.api), with selectable backend/precision -- the per-kernel
-equivalent of the Olympus "Optimize" step -- plus the composed
-interpolation -> gradient -> inverse-Helmholtz ProgramChain the chain
-planner (repro.memory.chain) sizes as one application.
+equivalent of the Olympus "Optimize" step.
+
+The composed application (interpolation -> gradient -> inverse
+Helmholtz) is no longer hand-wired here: :data:`CFD_PIPELINE_SRC` is the
+whole pipeline as one CFDlang program, and :func:`build_cfd_chain`
+compiles it through ``repro.flow`` -- the generic tool flow derives the
+stage programs, the inter-stage residency, and (for ``pallas`` stages)
+the kernel dispatch that ~180 lines of builder code used to encode.
 """
 from __future__ import annotations
 
 from typing import Optional, Sequence, Tuple, Union
 
+from .. import flow
 from ..core import api, dsl
 from ..core.emit import CompiledProgram
 from ..core.precision import POLICIES
@@ -130,6 +136,66 @@ def chain_stage_block_elements(
     return None
 
 
+#: The paper's full application as ONE CFDlang program: interpolation
+#: (A), gradient (Dx/Dy/Dz), and inverse Helmholtz (S, D) over a shared
+#: element stream.  ``repro.flow`` cuts it into the three pipeline
+#: stages at the declared temporaries -- no builder code per operator.
+CFD_PIPELINE_SRC = """
+var input  A  : [{p} {p}]
+var input  Dx : [{p} {p}]
+var input  Dy : [{p} {p}]
+var input  Dz : [{p} {p}]
+var input  S  : [{p} {p}]
+var input elem u  : [{p} {p} {p}]
+var input elem D  : [{p} {p} {p}]
+var output elem gy : [{p} {p} {p}]
+var output elem gz : [{p} {p} {p}]
+var output elem v  : [{p} {p} {p}]
+var w  : [{p} {p} {p}]
+var gx : [{p} {p} {p}]
+var t  : [{p} {p} {p}]
+var r  : [{p} {p} {p}]
+w = A # A # A # u . [[1 6][3 7][5 8]]
+gx = Dx # w . [[1 2]]
+gy = Dy # w . [[1 3]]
+gz = Dz # w . [[1 4]]
+t = S # S # S # gx . [[1 6][3 7][5 8]]
+r = D * t
+v = S # S # S # r . [[0 6][2 7][4 8]]
+"""
+
+#: The canonical stage cuts: interpolation owns ``w``, the gradient its
+#: three derivatives, the Helmholtz stage the final solve.
+CFD_PIPELINE_STAGES = (
+    ("interp", ("w",)),
+    ("grad", ("gx", "gy", "gz")),
+    ("helmholtz", ("v",)),
+)
+
+
+def compile_cfd_pipeline(
+    p: int = 11,
+    *,
+    policy="float32",
+    backends: Union[str, Tuple[str, str, str]] = "xla",
+    stage_blocks=None,
+    **flow_kwargs,
+) -> "flow.CompiledSystem":
+    """Compile the whole CFD application through ``repro.flow`` at the
+    paper's operator-granularity stage cuts."""
+    if isinstance(backends, str):
+        backends = (backends, backends, backends)
+    return flow.compile(
+        CFD_PIPELINE_SRC.format(p=p),
+        name=f"cfd_pipeline_p{p}",
+        policy=policy,
+        stages=CFD_PIPELINE_STAGES,
+        backends=backends,
+        stage_blocks=stage_blocks,
+        **flow_kwargs,
+    )
+
+
 def build_cfd_chain(
     p: int = 11,
     *,
@@ -142,11 +208,11 @@ def build_cfd_chain(
 
         interpolation -> gradient -> inverse Helmholtz
 
-    All stages share the element extent ``p`` so the streams line up:
-    interpolation's ``v`` feeds the gradient's ``u``, and the gradient's
-    ``gx`` feeds the Helmholtz ``u`` (``gy``/``gz`` stream back to the
-    host alongside the Helmholtz ``v``).  The chain planner keeps both
-    bound streams resident in HBM -- no host round-trip between stages.
+    Compiled end-to-end from :data:`CFD_PIPELINE_SRC` by ``repro.flow``:
+    the flow extracts the three stage programs, wires interpolation's
+    ``w`` into the gradient and the gradient's ``gx`` into the Helmholtz
+    solve (both HBM-resident -- no host round-trip), and streams
+    ``gy``/``gz``/``v`` back to the host.
 
     For a Pallas Helmholtz stage, pass the ChainPlan back in as
     ``chain_plan`` so the kernel's block size comes from the plan's
@@ -159,19 +225,16 @@ def build_cfd_chain(
                              chain_plan=plan)
         simulation.run_chain(ch, plan)
     """
-    if isinstance(backends, str):
-        backends = (backends, backends, backends)
-    interp = build_interpolation(n=p, m=p, policy=policy, backend=backends[0])
-    grad = build_gradient(nx=p, ny=p, nz=p, policy=policy, backend=backends[1])
-    helm = build_inverse_helmholtz(
-        p, policy=policy, backend=backends[2], plan=helmholtz_plan,
-        block_elements=chain_stage_block_elements(chain_plan, "helmholtz"),
-    )
-    return ProgramChain([
-        ("interp", interp),
-        ("grad", grad, {"u": "interp.v"}),
-        ("helmholtz", helm, {"u": "grad.gx"}),
-    ])
+    blocks = {}
+    blk = chain_stage_block_elements(chain_plan, "helmholtz")
+    if blk is None and helmholtz_plan is not None and (
+            helmholtz_plan.block_elements):
+        blk = helmholtz_plan.block_elements
+    if blk:
+        blocks["helmholtz"] = blk
+    return compile_cfd_pipeline(
+        p, policy=policy, backends=backends, stage_blocks=blocks
+    ).chain
 
 
 def flops_per_element(p: int) -> int:

@@ -268,7 +268,7 @@ def run_chain(
     """Execute a whole multi-operator pipeline off one ChainPlan.
 
     Every batch flows through all stages back-to-back: bound streams
-    (e.g. interpolation's ``v`` into the gradient's ``u``) never leave
+    (e.g. interpolation's ``w`` into the gradient) never leave
     the device -- exactly the residency the plan prices.  Host-streamed
     inputs come from ``inputs`` (full arrays, qualified "stage.input")
     or a deterministic synthetic stream; ``shared`` supplies the

@@ -15,7 +15,7 @@ Parses the concrete syntax from the paper (Fig. 2)::
 Grammar (whitespace-separated tokens; ``//`` comments to end of line)::
 
     program := stmt*
-    stmt    := 'var' ('input'|'output')? NAME ':' shape
+    stmt    := 'var' ('input'|'output')? 'elem'? NAME ':' shape
              | NAME '=' expr
     shape   := '[' INT+ ']'
     expr    := term (('+'|'-') term)*
@@ -23,6 +23,12 @@ Grammar (whitespace-separated tokens; ``//`` comments to end of line)::
     factor  := atom ('#' atom)* ('.' pairs)?       # outer product + contraction
     pairs   := '[' ('[' INT INT ']')+ ']'
     atom    := NAME | '(' expr ')'
+
+The ``elem`` qualifier marks an input/output as carrying the implicit
+element axis (the paper's outer element loop) directly in the source, so
+a ``.cfd`` file is self-contained for the ``repro.flow`` tool flow; the
+``element_vars`` argument of :func:`parse` remains available for sources
+without markers.
 
 Like the cfdlang MLIR dialect, the parser performs no canonicalization --
 it maps language elements 1:1 onto IR nodes and leaves rewriting to the
@@ -68,6 +74,7 @@ class _Parser:
         self.decls: Dict[str, Tuple[ir.Shape, str]] = {}  # name -> (shape, kind)
         self.values: Dict[str, ir.Node] = {}
         self.order: List[str] = []  # statement order for outputs
+        self.elem_decls: List[str] = []  # 'elem'-qualified declarations
 
     # -- token helpers ----
     def peek(self) -> Optional[str]:
@@ -116,22 +123,42 @@ class _Parser:
         }
         return ir.Program(inputs=inputs, outputs=outputs, temps=temps)
 
+    def _int(self, what: str) -> int:
+        t = self.next()
+        if not t.isdigit():
+            raise ParseError(
+                f"expected {what}, got {t!r} (CFDlang integers are "
+                "unsigned; '-' is a binary operator only)"
+            )
+        return int(t)
+
     def _parse_decl(self) -> None:
         self.expect("var")
         kind = "temp"
         if self.peek() in ("input", "output"):
             kind = self.next()
+        elem = False
+        if self.peek() == "elem" and self.toks[self.i + 1:self.i + 2] != [":"]:
+            self.next()
+            elem = True
+            if kind == "temp":
+                raise ParseError(
+                    "'elem' qualifies inputs/outputs only (temporaries "
+                    "never cross the host link)"
+                )
         name = self.next()
         self.expect(":")
         self.expect("[")
         dims: List[int] = []
         while self.peek() != "]":
-            dims.append(int(self.next()))
+            dims.append(self._int("dimension"))
         self.expect("]")
         if name in self.decls:
             raise ParseError(f"duplicate declaration of {name!r}")
         shape = tuple(dims)
         self.decls[name] = (shape, kind)
+        if elem:
+            self.elem_decls.append(name)
         if kind == "input":
             self.values[name] = ir.Input(shape=shape, name=name)
 
@@ -185,8 +212,8 @@ class _Parser:
         pairs: List[Tuple[int, int]] = []
         while self.peek() == "[":
             self.next()
-            a = int(self.next())
-            b = int(self.next())
+            a = self._int("axis number")
+            b = self._int("axis number")
             self.expect("]")
             pairs.append((a, b))
         self.expect("]")
@@ -200,6 +227,14 @@ class _Parser:
             node = self._expr()
             self.expect(")")
             return node
+        if t in ("+", "-"):
+            # a stray leading sign used to cascade into a confusing
+            # "unknown identifier" chain; reject it at the source
+            raise ParseError(
+                f"{t!r} is a binary operator in CFDlang; unary signs are "
+                "not part of the grammar (write '0 - x' via a declared "
+                "zero operand, or fold the sign into the data)"
+            )
         if t in self.values:
             return self.values[t]
         if t in self.decls:
@@ -213,12 +248,23 @@ def parse(src: str, element_vars: Sequence[str] = ()) -> ir.Program:
     ``element_vars`` marks inputs/outputs that carry the implicit element
     axis (the paper's outer element loop); e.g. for the Inverse Helmholtz
     operator: ``("u", "D", "v")`` -- the operator matrix ``S`` is shared.
+    Sources may equivalently carry ``elem`` qualifiers on declarations;
+    both spellings are merged (declaration order first).
     """
-    prog = _Parser(_tokenize(src)).parse()
+    toks = _tokenize(src)
+    if not toks:
+        raise ParseError(
+            "empty program: no declarations or statements "
+            "(comment-only/blank source)"
+        )
+    parser = _Parser(toks)
+    prog = parser.parse()
+    merged = list(parser.elem_decls)
+    merged += [v for v in element_vars if v not in merged]
     return ir.Program(
         inputs=prog.inputs,
         outputs=prog.outputs,
-        element_vars=tuple(element_vars),
+        element_vars=tuple(merged),
         temps=prog.temps,
     )
 

@@ -317,6 +317,19 @@ class Program:
     def total_flops(self) -> int:
         return sum(n.flops() for n in self.toposort())
 
+    def element_dependent_uids(self) -> set:
+        """Uids of values that (transitively) depend on an element-marked
+        input -- i.e. values that carry the implicit element axis when the
+        program is batched.  Everything else is batch-invariant (computed
+        once from shared operands, like the paper's S matrix)."""
+        dep = {
+            v.uid for n, v in self.inputs.items() if n in self.element_vars
+        }
+        for node in self.toposort():
+            if any(op.uid in dep for op in node.operands()):
+                dep.add(node.uid)
+        return dep
+
     def replace(self, mapping: Dict[int, Node]) -> "Program":
         """Return a program with nodes substituted per ``mapping`` (uid->node),
         rebuilding downstream nodes so operand links stay consistent."""
@@ -370,3 +383,60 @@ class Program:
         for k, v in self.outputs.items():
             lines.append(f"yield @{k} = %{v.uid}")
         return "\n".join(lines)
+
+
+def subprogram(
+    nodes: Sequence[Node],
+    inputs: Dict[str, Node],
+    outputs: Dict[str, Node],
+    element_vars: Sequence[str] = (),
+) -> Program:
+    """Rebuild a slice of a larger program as a standalone :class:`Program`.
+
+    ``nodes`` are the slice's computation (topologically ordered);
+    ``inputs`` names every boundary value the slice consumes (original
+    program inputs or values produced outside the slice) -- each becomes a
+    fresh :class:`Input` of the same shape; ``outputs`` names the slice's
+    boundary results.  This is what the ``repro.flow`` stage extraction
+    uses to turn scheduled groups into chain-stage programs.
+    """
+    placeholders: Dict[int, Node] = {
+        v.uid: Input(shape=v.shape, name=name) for name, v in inputs.items()
+    }
+    rebuilt: Dict[int, Node] = dict(placeholders)
+    for n in nodes:
+        if n.uid in rebuilt:
+            continue
+        try:
+            new_ops = tuple(rebuilt[op.uid] for op in n.operands())
+        except KeyError as e:
+            raise IRError(
+                f"subprogram: node %{n.uid} consumes a value "
+                f"({e.args[0]}) that is neither in the slice nor a "
+                "declared boundary input"
+            ) from e
+        if isinstance(n, Einsum):
+            rebuilt[n.uid] = Einsum(
+                shape=n.shape, ops=new_ops, in_subs=n.in_subs,
+                out_subs=n.out_subs,
+            )
+        elif isinstance(n, Ewise):
+            rebuilt[n.uid] = Ewise(
+                shape=n.shape, op=n.op, lhs=new_ops[0],
+                rhs=new_ops[1] if len(new_ops) > 1 else None,
+                const=n.const,
+            )
+        else:
+            raise IRError(f"subprogram: cannot rebuild {n!r}")
+    new_outputs: Dict[str, Node] = {}
+    for name, v in outputs.items():
+        if v.uid not in rebuilt:
+            raise IRError(
+                f"subprogram: output {name!r} is not produced by the slice"
+            )
+        new_outputs[name] = rebuilt[v.uid]
+    return Program(
+        inputs={name: placeholders[v.uid] for name, v in inputs.items()},
+        outputs=new_outputs,
+        element_vars=tuple(element_vars),
+    )

@@ -93,3 +93,48 @@ def plan_sharing(group: Group, bytes_per_scalar: int = 4) -> SharingPlan:
 
 def plan_program(groups: Sequence[Group], bytes_per_scalar: int = 4) -> Dict[str, SharingPlan]:
     return {g.name: plan_sharing(g, bytes_per_scalar) for g in groups}
+
+
+# ---------------------------------------------------------------------------
+# cross-stage stream classification (the repro.flow residency hook)
+# ---------------------------------------------------------------------------
+
+#: classification labels for values crossing a stage boundary
+STREAM_RESIDENT = "resident"   # consumed by a later stage only: stays in HBM
+STREAM_HOST = "host"           # program output only: crosses the host link
+STREAM_BOTH = "both"           # program output also consumed downstream
+
+
+def classify_boundary_streams(
+    prog, stage_nodes: Sequence[Sequence["ir.Node"]]
+) -> Dict[int, str]:
+    """Classify every value that crosses a stage boundary.
+
+    Given a partition of the program's nodes into pipeline stages (see
+    ``schedule.stage_partition``), the liveness of each produced value
+    decides where it lives: a value whose only readers are later stages
+    never needs the host link (``resident`` -- the chain planner prices
+    it as an HBM round-trip), a program output with no later readers is
+    ``host``-streamed, and an output that later stages also read is
+    ``both``.  Values consumed only inside their producing stage do not
+    appear in the result.
+    """
+    stage_of: Dict[int, int] = {}
+    for i, nodes in enumerate(stage_nodes):
+        for n in nodes:
+            stage_of[n.uid] = i
+    output_uids = {v.uid for v in prog.outputs.values()}
+    crossers: Dict[int, str] = {}
+    for i, nodes in enumerate(stage_nodes):
+        for n in nodes:
+            for op in n.operands():
+                p = stage_of.get(op.uid)
+                if p is not None and p != i:
+                    crossers[op.uid] = (
+                        STREAM_BOTH if op.uid in output_uids
+                        else STREAM_RESIDENT
+                    )
+    for uid in output_uids:
+        if uid in stage_of and uid not in crossers:
+            crossers[uid] = STREAM_HOST
+    return crossers

@@ -267,3 +267,41 @@ def schedule(
     return Schedule(
         groups=groups, program=prog, bytes_per_scalar=bytes_per_scalar
     )
+
+
+def stage_partition(sched: Schedule) -> List[List[ir.Node]]:
+    """Scheduled groups as pipeline-stage node lists (the ``repro.flow``
+    stage-extraction hook).
+
+    Group boundaries become chain-stage boundaries, with one adjustment:
+    a group containing no element-dependent work (a pure function of
+    shared operands, e.g. a precomputed operator product) cannot stream
+    batches on its own, so it is folded into the earliest group that
+    consumes one of its values.  Node order inside each stage follows the
+    program's topological order.
+    """
+    prog = sched.program
+    elem_dep = prog.element_dependent_uids()
+    topo_pos = {n.uid: i for i, n in enumerate(prog.toposort())}
+
+    stages: List[List[ir.Node]] = [list(g.nodes) for g in sched.groups]
+    # fold element-free groups forward, last-to-first so cascades settle
+    for i in range(len(stages) - 1, -1, -1):
+        if any(n.uid in elem_dep for n in stages[i]):
+            continue
+        produced = {n.uid for n in stages[i]}
+        consumer = None
+        for j in range(i + 1, len(stages)):
+            if any(
+                op.uid in produced
+                for n in stages[j] for op in n.operands()
+            ):
+                consumer = j
+                break
+        if consumer is None:
+            continue  # feeds nothing later (an element-free output)
+        stages[consumer] = stages[i] + stages[consumer]
+        stages[i] = []
+    return [
+        sorted(s, key=lambda n: topo_pos[n.uid]) for s in stages if s
+    ]

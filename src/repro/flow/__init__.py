@@ -1,0 +1,23 @@
+"""repro.flow -- the end-to-end tool flow (the paper's Fig. 5 pipeline).
+
+One call compiles *any* CFDlang program into a planned, executable
+memory architecture, with no hand-written per-operator code::
+
+    from repro import flow
+    system = flow.compile(open("prog.cfd").read(), target="alveo-u280")
+    print(system.report())      # the generated-architecture description
+    result = system.run(max_batches=4)
+
+  build     -- compile(): parse -> rewrite -> schedule -> stage
+               extraction -> chain -> plan (-> optional DSE)
+  patterns  -- structural Pallas kernel dispatch for matched stages
+  cli       -- ``python -m repro.flow prog.cfd --target alveo_u280``
+"""
+from . import build, cli, patterns
+from .build import CompiledSystem, FlowError, StreamInfo, compile, resolve_target
+
+__all__ = [
+    "build", "cli", "patterns",
+    "compile", "CompiledSystem", "FlowError", "StreamInfo",
+    "resolve_target",
+]

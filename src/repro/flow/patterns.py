@@ -1,0 +1,123 @@
+"""Pallas pattern dispatch: match a stage program against hand-tiled
+kernels (the paper's "Optimize" step picking a specialized CU).
+
+``core.emit`` compiles ``backend='pallas'`` only when handed a concrete
+``pallas_impl``; this module supplies it by *structural* matching -- a
+stage program whose IR is isomorphic to a known kernel's program (same
+einsum/ewise graph, same shapes, any input names) is dispatched to that
+kernel, with the stage's actual input/output names adapted.  Unmatched
+stages fall back to ``xla``, exactly as emit's docstring promises.
+
+Matching is name-insensitive: the flow's stage extraction renames
+streams (the Fig. 2 ``u`` arrives as ``gx`` inside the CFD pipeline), so
+signatures canonicalize subscripts and identify inputs positionally by
+topological order.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Optional, Tuple
+
+from ..core import dsl, ir, rewrite
+from ..core.emit import einsum_spec
+from ..kernels.helmholtz import ops as helmholtz_ops
+
+
+def program_signature(prog: ir.Program) -> Tuple:
+    """A name-insensitive structural key for a program.
+
+    Two programs share a signature iff their value graphs are isomorphic
+    with identical shapes and einsum/ewise semantics -- the input *names*
+    are deliberately excluded so renamed streams still match.
+    """
+    order = prog.toposort()
+    idx = {n.uid: i for i, n in enumerate(order)}
+    sig = []
+    for n in order:
+        if isinstance(n, ir.Input):
+            sig.append(("input", n.shape))
+        elif isinstance(n, ir.Einsum):
+            sig.append((
+                "einsum", einsum_spec(n),
+                tuple(idx[o.uid] for o in n.ops), n.shape,
+            ))
+        elif isinstance(n, ir.Ewise):
+            sig.append((
+                "ewise", n.op, n.const,
+                tuple(idx[o.uid] for o in n.operands()), n.shape,
+            ))
+        else:  # pragma: no cover - no other node kinds exist
+            sig.append(("other", n.shape))
+    outs = tuple(idx[v.uid] for v in prog.outputs.values())
+    return (tuple(sig), outs)
+
+
+def _inputs_by_position(prog: ir.Program) -> Tuple[str, ...]:
+    """Input names in topological (first-use) order -- the positional
+    role order both sides of a signature match share."""
+    name_of = {v.uid: k for k, v in prog.inputs.items()}
+    return tuple(
+        name_of[n.uid] for n in prog.toposort() if isinstance(n, ir.Input)
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _helmholtz_reference(p: int) -> Tuple[Tuple, Tuple[str, ...]]:
+    prog = rewrite.optimize(
+        dsl.parse(
+            dsl.INVERSE_HELMHOLTZ_SRC.format(p=p),
+            element_vars=("u", "D", "v"),
+        )
+    )
+    return program_signature(prog), _inputs_by_position(prog)
+
+
+def match_inverse_helmholtz(
+    prog: ir.Program,
+) -> Optional[Tuple[Dict[str, str], str]]:
+    """Does ``prog`` compute the fused Inverse-Helmholtz operator?
+
+    Returns ``(rename, out_name)`` where ``rename`` maps the kernel's
+    canonical input roles (``S``/``D``/``u``) to the program's actual
+    input names, or None when the structure differs.
+    """
+    if len(prog.outputs) != 1 or len(prog.inputs) != 3:
+        return None
+    out_shape = next(iter(prog.outputs.values())).shape
+    if len(out_shape) != 3 or len(set(out_shape)) != 1:
+        return None
+    p = out_shape[0]
+    ref_sig, ref_roles = _helmholtz_reference(p)
+    if program_signature(prog) != ref_sig:
+        return None
+    rename = dict(zip(ref_roles, _inputs_by_position(prog)))
+    return rename, next(iter(prog.outputs))
+
+
+def pallas_impl_for(
+    prog: ir.Program,
+    *,
+    block_elements: Optional[int] = None,
+) -> Optional[Callable]:
+    """A batched ``pallas_impl`` for ``core.emit.compile_program``, or
+    None when no hand-tiled kernel matches the program."""
+    matched = match_inverse_helmholtz(prog)
+    if matched is None:
+        return None
+    rename, out_name = matched
+    inner = helmholtz_ops.make_pallas_impl(
+        block_elements=(
+            block_elements if block_elements
+            else helmholtz_ops.DEFAULT_BLOCK_ELEMENTS
+        )
+    )
+
+    def impl(env):
+        out = inner({
+            "S": env[rename["S"]],
+            "D": env[rename["D"]],
+            "u": env[rename["u"]],
+        })
+        return {out_name: out["v"]}
+
+    return impl

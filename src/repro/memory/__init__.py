@@ -21,8 +21,8 @@ from .chain import ChainPlan, ChainStage, ProgramChain, plan_chain
 from .channels import ALVEO_U280, CPU_HOST, TPU_V5E, MemoryTarget, detect_target
 from .dse import (Candidate, ChainCandidate, ChainDesignSpace,
                   CostCorrection, DesignSpace, explore, explore_chain,
-                  fit_correction, make_plan, measure_chain_plan,
-                  pareto_front)
+                  fit_correction, format_chain_ranking, make_plan,
+                  measure_chain_plan, pareto_front)
 from .plan import BufferSpec, CostBreakdown, MemoryPlan
 
 __all__ = [
@@ -30,7 +30,8 @@ __all__ = [
     "MemoryTarget", "ALVEO_U280", "TPU_V5E", "CPU_HOST", "detect_target",
     "Candidate", "DesignSpace", "explore", "make_plan", "pareto_front",
     "ChainCandidate", "ChainDesignSpace", "CostCorrection",
-    "explore_chain", "fit_correction", "measure_chain_plan",
+    "explore_chain", "fit_correction", "format_chain_ranking",
+    "measure_chain_plan",
     "ProgramChain", "ChainStage", "ChainPlan", "plan_chain",
     "BufferSpec", "CostBreakdown", "MemoryPlan",
 ]

@@ -315,6 +315,9 @@ class ChainPlan:
     cost: ChainCost
     feasible: bool = True
     infeasible_reason: str = ""
+    #: elements added to (negative: trimmed from) the auto-sized E so it
+    #: is a multiple of every stage's VMEM block (0 for explicit E).
+    batch_pad_elements: int = 0
 
     @property
     def buffers(self) -> Tuple[BufferSpec, ...]:
@@ -365,6 +368,12 @@ class ChainPlan:
             f"MiB/batch   hbm traffic "
             f"{self.hbm_stream_bytes / mib:.1f} MiB/batch",
         ]
+        if self.batch_pad_elements:
+            lines.append(
+                f"  E auto-padded {self.batch_pad_elements:+d} elements "
+                f"(from {self.batch_elements - self.batch_pad_elements}) "
+                "to keep every stage's VMEM block divisor composite"
+            )
         for sp in self.stages:
             c = sp.cost
             lines += [
@@ -445,12 +454,26 @@ def plan_chain(
             raise ValueError(f"need {n_stages} prefetch depths")
     any_prefetch = any(d > 0 for d in depths)
 
-    e = batch_elements if batch_elements is not None else (
-        chain.auto_batch_elements(
+    pad = 0
+    if batch_elements is not None:
+        e = batch_elements
+    else:
+        e = chain.auto_batch_elements(
             target, bytes_per_scalar=bps,
             channel_bytes=channel_bytes, n_eq=n_eq,
         )
-    )
+        # co-sized E is padded to a multiple of the largest stage block
+        # cap (caps are powers of two, so every stage's divides too);
+        # all caps are passed so a small-cap stage cannot stay starved
+        caps = [
+            layout.vmem_block_elements(
+                s.program, target, bytes_per_scalar=bps
+            )
+            for s in chain.stages
+        ]
+        e, pad = layout.pad_batch_for_block(
+            e, max(caps), limit=n_eq, caps=caps
+        )
     e = max(1, int(e))
     if n_eq is not None:
         e = min(e, max(1, n_eq))
@@ -571,6 +594,7 @@ def plan_chain(
         batch_elements=e, cu_count=cu_count,
         stages=tuple(stage_plans),
         cost=ChainCost(stages=tuple(sp.cost for sp in stage_plans)),
+        batch_pad_elements=pad,
     )
     worst_blk = max(sp.block_working_set_bytes for sp in stage_plans)
     feasible, reason = True, ""

@@ -133,10 +133,18 @@ def make_plan(
     if sched is None and backend == "staged":
         sched = make_schedule(prog, bytes_per_scalar=bps)
 
-    e = batch_elements if batch_elements is not None else layout.auto_batch_elements(
-        prog, target, bytes_per_scalar=bps,
-        channel_bytes=channel_bytes, n_eq=n_eq,
-    )
+    blk_cap = layout.vmem_block_elements(prog, target, bytes_per_scalar=bps)
+    pad = 0
+    if batch_elements is not None:
+        e = batch_elements
+    else:
+        e = layout.auto_batch_elements(
+            prog, target, bytes_per_scalar=bps,
+            channel_bytes=channel_bytes, n_eq=n_eq,
+        )
+        # auto-sized E is padded to a block multiple so a prime-ish
+        # channel quotient never forces the Pallas block divisor tiny
+        e, pad = layout.pad_batch_for_block(e, blk_cap, limit=n_eq)
     e = max(1, int(e))
     if n_eq is not None:
         e = min(e, max(1, n_eq))  # a batch never exceeds the problem
@@ -157,9 +165,7 @@ def make_plan(
 
     # on-chip block: largest divisor of E whose fused-kernel working set
     # fits the VMEM budget (drives the Pallas kernel's block_elements)
-    blk = layout.largest_divisor_leq(
-        e, layout.vmem_block_elements(prog, target, bytes_per_scalar=bps)
-    )
+    blk = layout.largest_divisor_leq(e, blk_cap)
     blk_ws = layout.block_working_set_bytes(prog, blk, bytes_per_scalar=bps)
 
     feasible, reason = True, ""
@@ -192,6 +198,7 @@ def make_plan(
         buffers=bufs, cost=cost, feasible=feasible,
         infeasible_reason=reason, flops_per_element=flops_pe,
         block_elements=blk, block_working_set_bytes=blk_ws,
+        batch_pad_elements=pad,
     )
 
 
@@ -229,44 +236,85 @@ class Candidate:
 
 @dataclasses.dataclass(frozen=True)
 class CostCorrection:
-    """Measured-feedback correction for the analytic model (the ROADMAP's
-    'learned correction'): a multiplicative factor fit as the geometric
-    mean of measured/predicted ratios over verified candidates.  A
-    single factor preserves the model's monotonicity guarantees while
-    absorbing the systematic bias (dispatch overheads, allocator noise)
-    the paper's predict-then-build loop observes."""
+    """Measured-feedback correction for the analytic model, learned *per
+    cost term* from measured ladders (the ROADMAP's split of the old
+    single scalar): candidates whose measured runs were bottlenecked on
+    the host link calibrate ``host_factor``, HBM-bound runs calibrate
+    ``hbm_factor``, compute-bound runs ``compute_factor`` -- each the
+    geometric mean of measured/predicted ratios over that class.
+    ``factor`` is the overall geometric mean and the fallback for terms
+    the ladder never exercised.  All factors are positive multipliers,
+    so the model's monotonicity guarantees survive correction."""
 
     factor: float = 1.0
     n_samples: int = 0
+    host_factor: Optional[float] = None
+    hbm_factor: Optional[float] = None
+    compute_factor: Optional[float] = None
 
-    def corrected(self, predicted_s: float) -> float:
-        return predicted_s * self.factor
+    def factor_for(self, bottleneck: Optional[str] = None) -> float:
+        """The multiplier for a prediction dominated by ``bottleneck``
+        (a ``CostBreakdown.bottleneck`` label); overall factor when the
+        term was never measured (or no term is given)."""
+        per_term = {
+            "host-link": self.host_factor,
+            "hbm": self.hbm_factor,
+            "compute": self.compute_factor,
+        }.get(bottleneck)
+        return per_term if per_term is not None else self.factor
+
+    def corrected(
+        self, predicted_s: float, bottleneck: Optional[str] = None
+    ) -> float:
+        return predicted_s * self.factor_for(bottleneck)
+
+
+def _geomean(ratios: Sequence[float]) -> float:
+    import math
+
+    return math.exp(sum(math.log(r) for r in ratios) / len(ratios))
 
 
 def fit_correction(cands: Sequence[Candidate]) -> CostCorrection:
-    """Fit the correction from every measured candidate (identity when
-    nothing was measured)."""
-    import math
-
-    ratios = [
-        c.measured_s_per_element / c.predicted_s_per_element
-        for c in cands
-        if c.verified and c.predicted_s_per_element > 0
-    ]
+    """Fit the per-term correction from every measured candidate
+    (identity when nothing was measured).  Each measured run's
+    measured/predicted ratio is attributed to the cost term its plan
+    predicts as the bottleneck."""
+    ratios: List[float] = []
+    by_term: Dict[str, List[float]] = {}
+    for c in cands:
+        if not c.verified or c.predicted_s_per_element <= 0:
+            continue
+        r = c.measured_s_per_element / c.predicted_s_per_element
+        ratios.append(r)
+        by_term.setdefault(c.plan.cost.bottleneck, []).append(r)
     if not ratios:
         return CostCorrection()
-    log_mean = sum(math.log(r) for r in ratios) / len(ratios)
-    return CostCorrection(factor=math.exp(log_mean), n_samples=len(ratios))
+    term = {
+        k: _geomean(v) if v else None
+        for k, v in (
+            ("host-link", by_term.get("host-link")),
+            ("hbm", by_term.get("hbm")),
+            ("compute", by_term.get("compute")),
+        )
+    }
+    return CostCorrection(
+        factor=_geomean(ratios), n_samples=len(ratios),
+        host_factor=term["host-link"], hbm_factor=term["hbm"],
+        compute_factor=term["compute"],
+    )
 
 
 def apply_correction(
     cands: List[Candidate], correction: CostCorrection
 ) -> List[Candidate]:
-    """Annotate every candidate with its corrected prediction and re-rank
-    (measured values, where present, outrank corrected predictions)."""
+    """Annotate every candidate with its corrected prediction (scaled by
+    the factor of the term its own cost model says dominates) and
+    re-rank (measured values, where present, outrank corrected
+    predictions)."""
     for c in cands:
         c.corrected_s_per_element = correction.corrected(
-            c.predicted_s_per_element
+            c.predicted_s_per_element, c.plan.cost.bottleneck
         )
     cands.sort(
         key=lambda c: (
@@ -315,6 +363,13 @@ def explore(
         bps = POLICIES[policy].bits // 8
         auto_e = layout.auto_batch_elements(
             prog, target, bytes_per_scalar=bps, n_eq=n_eq
+        )
+        # the sweep explores divisors of the *padded* auto-E, so every
+        # candidate batch stays block-composite
+        auto_e, _ = layout.pad_batch_for_block(
+            auto_e,
+            layout.vmem_block_elements(prog, target, bytes_per_scalar=bps),
+            limit=n_eq,
         )
         e_cands = sorted({max(1, auto_e // d) for d in space.batch_divisors})
         for backend in space.backends:
@@ -457,6 +512,15 @@ def explore_chain(
         auto_e = chain.auto_batch_elements(
             target, bytes_per_scalar=bps, n_eq=n_eq
         )
+        stage_caps = [
+            layout.vmem_block_elements(
+                s.program, target, bytes_per_scalar=bps
+            )
+            for s in chain.stages
+        ]
+        auto_e, _ = layout.pad_batch_for_block(
+            auto_e, max(stage_caps), limit=n_eq, caps=stage_caps
+        )
         e_cands = sorted({max(1, auto_e // d) for d in space.batch_divisors})
         for backends in combos:
             for e in e_cands:
@@ -573,6 +637,35 @@ def _measure_candidates(
         if got is not None:
             c.measured_s_per_element = got
             measured += 1
+
+
+def format_chain_ranking(
+    cands: Sequence[ChainCandidate], limit: int = 10
+) -> str:
+    """Compact leaderboard for chain sweeps (per-stage backends)."""
+    hdr = (
+        f"{'#':>3} {'backends':<28} {'policy':<10} {'E':>8} {'K':>2} "
+        f"{'pred us/elem':>13} {'meas us/elem':>13} "
+        f"{'resident MiB':>13} {'feasible':>9}"
+    )
+    lines = [hdr, "-" * len(hdr)]
+    for i, c in enumerate(cands[:limit]):
+        p = c.plan
+        meas = (
+            f"{c.measured_s_per_element * 1e6:13.4f}"
+            if c.measured_s_per_element is not None else f"{'-':>13}"
+        )
+        backends = ",".join(sp.backend for sp in p.stages)
+        if len(backends) > 28:
+            backends = backends[:25] + "..."
+        lines.append(
+            f"{i:>3} {backends:<28} {p.policy:<10} {p.batch_elements:>8} "
+            f"{max(sp.prefetch_depth for sp in p.stages):>2} "
+            f"{c.predicted_s_per_element * 1e6:>13.4f} "
+            f"{meas} {p.resident_bytes / 2**20:>13.1f} "
+            f"{'yes' if p.feasible else 'no':>9}"
+        )
+    return "\n".join(lines)
 
 
 def format_ranking(cands: Sequence[Candidate], limit: int = 10) -> str:

@@ -24,7 +24,7 @@ program place their buffers without conflicts.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 from ..core import ir
 from ..core.schedule import Schedule
@@ -213,6 +213,48 @@ def vmem_block_elements(
     ) <= budget:
         be *= 2
     return be
+
+
+def pad_batch_for_block(
+    e: int,
+    block_cap: int,
+    *,
+    limit: Optional[int] = None,
+    caps: Optional[Sequence[int]] = None,
+) -> Tuple[int, int]:
+    """Auto-pad E to a block-composite size (ROADMAP: a prime-ish
+    natural E must never force the Pallas block divisor tiny).
+
+    Rounds E up to the next multiple of the (power-of-two) VMEM block
+    cap, so ``largest_divisor_leq(E, cap) == cap`` -- the paper pads the
+    tail batch the same way it pads records to HBM words.  E is left
+    alone when its natural block is already at least half the cap (no
+    filler for a near-optimal divisor); for chain planning, pass every
+    stage's cap via ``caps`` so that check covers the *smallest* stage
+    too (a multiple of the largest power-of-two cap divides the rest).
+    ``limit`` (the problem size ``n_eq``) bounds the padded batch: when
+    rounding up would exceed it, E snaps *down* to the nearest block
+    multiple instead (never below one block).  Returns ``(padded_e,
+    pad)`` with ``pad = padded_e - e`` (negative when snapped down);
+    the plan reports the pad so the host knows how many tail elements
+    per batch are filler.
+    """
+    all_caps = [block_cap] + [c for c in (caps or ())]
+    block_cap = max(all_caps)
+    if block_cap <= 1 or e <= block_cap:
+        return e, 0
+    if all(
+        c <= 1 or e <= c or largest_divisor_leq(e, c) * 2 >= c
+        for c in all_caps
+    ):
+        return e, 0  # natural E already composite enough: no filler
+    up = -(-e // block_cap) * block_cap
+    if limit is None or up <= limit:
+        return up, up - e
+    down = (e // block_cap) * block_cap
+    if down >= block_cap:
+        return down, down - e
+    return e, 0
 
 
 def largest_divisor_leq(n: int, bound: int) -> int:

@@ -128,6 +128,10 @@ class MemoryPlan:
     #: memory (drives the Pallas kernel's ``block_elements``); divides E.
     block_elements: int = 0
     block_working_set_bytes: int = 0
+    #: elements added to (or, negative, trimmed from) the auto-sized E so
+    #: it is a multiple of the VMEM block (0 when E was given explicitly
+    #: or already composite).  Padded tail elements are host-side filler.
+    batch_pad_elements: int = 0
 
     # -- aggregates ---------------------------------------------------------
     @property
@@ -184,6 +188,12 @@ class MemoryPlan:
                 f"  vmem block BE={self.block_elements} elements   "
                 f"working set {self.block_working_set_bytes / mib:.2f} MiB "
                 f"of {t.vmem_bytes / mib:.0f} MiB VMEM"
+            )
+        if self.batch_pad_elements:
+            lines.append(
+                f"  E auto-padded {self.batch_pad_elements:+d} elements "
+                f"(from {self.batch_elements - self.batch_pad_elements}) "
+                "to keep the VMEM block divisor composite"
             )
         lines += [
             "",

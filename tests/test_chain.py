@@ -34,10 +34,11 @@ def _chain_inputs(chain, n, p, rng):
 def test_chain_structure(cfd_chain):
     ch = cfd_chain
     assert ch.name == "interp->grad->helmholtz"
-    # bound streams: interp.v -> grad.u, grad.gx -> helmholtz.u
-    assert ch.resolved[1] == {"u": (0, "v")}
-    assert ch.resolved[2] == {"u": (1, "gx")}
-    assert [n for n, _ in ch.resident_outputs(0)] == ["v"]
+    # bound streams (flow-derived from the pipeline source): interp's w
+    # feeds the gradient, the gradient's gx feeds the Helmholtz solve
+    assert ch.resolved[1] == {"w": (0, "w")}
+    assert ch.resolved[2] == {"gx": (1, "gx")}
+    assert [n for n, _ in ch.resident_outputs(0)] == ["w"]
     assert [n for n, _ in ch.resident_outputs(1)] == ["gx"]
     # fringe: only unbound element vars touch the host
     assert [n for n, _ in ch.host_element_inputs(0)] == ["u"]
@@ -98,10 +99,10 @@ def test_chain_plan_fewer_host_bytes_than_standalone(cfd_chain):
         for s in cfd_chain.stages
     )
     assert plan.host_stream_bytes < standalone
-    # exactly the bound streams stay resident: interp.v and grad.gx,
+    # exactly the bound streams stay resident: interp.w and grad.gx,
     # each saving one host write + one host read
     resident = [b for b in plan.buffers if b.role == "resident"]
-    assert sorted(b.name for b in resident) == ["grad.gx", "interp.v"]
+    assert sorted(b.name for b in resident) == ["grad.gx", "interp.w"]
     assert standalone - plan.host_stream_bytes == 2 * sum(
         b.batch_bytes for b in resident
     )
@@ -109,18 +110,29 @@ def test_chain_plan_fewer_host_bytes_than_standalone(cfd_chain):
 
 
 def test_chain_cosized_e_fits_every_stage(cfd_chain):
-    """The shared E satisfies the channel rule for each stage, and at
-    least one stage is tight (E is maximal)."""
+    """The shared E (before block padding) satisfies the channel rule
+    for each stage, at least one stage is tight (E is maximal), and the
+    padded E is a multiple of every stage's VMEM block."""
     t = channels.ALVEO_U280
     plan = mchain.plan_chain(cfd_chain, target=t)
-    e = plan.batch_elements
+    base = plan.batch_elements - plan.batch_pad_elements
     tight = False
     for i in range(len(cfd_chain.stages)):
         per = cfd_chain.stage_stream_bytes_per_element(i, 4)
-        assert e * per <= t.channel_bytes
-        if (e + 1) * per > t.channel_bytes:
+        assert base * per <= t.channel_bytes
+        if (base + 1) * per > t.channel_bytes:
             tight = True
     assert tight
+    for sp in plan.stages:
+        assert plan.batch_elements % sp.block_elements == 0
+    # the padder's contract: for the largest stage cap, the chosen E's
+    # block divisor is never below half the cap (prime-ish E padded away)
+    max_cap = max(
+        layout.vmem_block_elements(s.program, t, bytes_per_scalar=4)
+        for s in cfd_chain.stages
+    )
+    blk = layout.largest_divisor_leq(plan.batch_elements, max_cap)
+    assert 2 * blk >= min(max_cap, plan.batch_elements)
 
 
 def test_chain_placement_no_conflicts(cfd_chain):
@@ -199,17 +211,17 @@ def test_run_chain_bitwise_matches_unchained(cfd_chain, rng):
     ref = {"grad.gy": [], "grad.gz": [], "helmholtz.v": []}
     for b in range(n_b):
         sl = slice(b * E, (b + 1) * E)
-        v = np.asarray(interp.batched_fn(
-            {"A": shared["A"], "u": inputs["interp.u"][sl]})["v"])
+        w = np.asarray(interp.batched_fn(
+            {"A": shared["A"], "u": inputs["interp.u"][sl]})["w"])
         g = grad.batched_fn({
             "Dx": shared["Dx"], "Dy": shared["Dy"], "Dz": shared["Dz"],
-            "u": v,
+            "w": w,
         })
         ref["grad.gy"].append(np.asarray(g["gy"]))
         ref["grad.gz"].append(np.asarray(g["gz"]))
         hv = helm.batched_fn({
             "S": shared["S"], "D": inputs["helmholtz.D"][sl],
-            "u": np.asarray(g["gx"]),
+            "gx": np.asarray(g["gx"]),
         })["v"]
         ref["helmholtz.v"].append(np.asarray(hv))
     for q in ref:

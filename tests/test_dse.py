@@ -146,6 +146,42 @@ def test_fit_correction_identity_without_measurements():
     assert corr.corrected(3.0) == 3.0
 
 
+def _cand_with_terms(pred, meas, t_compute, t_hbm, t_host):
+    plan = dse.make_plan(5, target=channels.ALVEO_U280, batch_elements=64)
+    cost = dataclasses.replace(
+        plan.cost, t_compute=t_compute, t_hbm=t_hbm, t_host=t_host
+    )
+    return dse.Candidate(
+        plan=dataclasses.replace(plan, cost=cost),
+        predicted_s_per_element=pred, measured_s_per_element=meas,
+    )
+
+
+def test_fit_correction_learns_per_term_factors():
+    """Ratios are attributed to the measured run's bottleneck term:
+    host-bound ladders calibrate the host factor, compute-bound ladders
+    the compute factor; unobserved terms fall back to the overall
+    geometric mean."""
+    host = _cand_with_terms(1e-6, 2e-6, 0.1, 0.2, 1.0)   # ratio 2
+    comp = _cand_with_terms(1e-6, 8e-6, 1.0, 0.2, 0.1)   # ratio 8
+    corr = dse.fit_correction([host, comp])
+    assert corr.n_samples == 2
+    assert corr.host_factor == pytest.approx(2.0)
+    assert corr.compute_factor == pytest.approx(8.0)
+    assert corr.hbm_factor is None
+    assert corr.factor == pytest.approx(4.0)
+    assert corr.factor_for("host-link") == pytest.approx(2.0)
+    assert corr.factor_for("compute") == pytest.approx(8.0)
+    assert corr.factor_for("hbm") == pytest.approx(4.0)    # fallback
+    assert corr.factor_for(None) == pytest.approx(4.0)
+    assert corr.corrected(1e-6, "compute") == pytest.approx(8e-6)
+    # apply_correction scales each candidate by its own bottleneck term
+    fast = dse.Candidate(plan=host.plan, predicted_s_per_element=2e-6)
+    dse.apply_correction([host, comp, fast], corr)
+    assert fast.corrected_s_per_element == pytest.approx(4e-6)
+    assert comp.corrected_s_per_element == pytest.approx(8e-6)
+
+
 def test_calibrate_requires_measurement():
     with pytest.raises(ValueError, match="measure_top"):
         dse.explore(5, target=channels.CPU_HOST, n_eq=64, calibrate=True)

@@ -43,6 +43,51 @@ def test_parse_errors():
         )
 
 
+def test_stray_leading_sign_rejected_clearly():
+    """'-' (and '+') are binary-only: a stray leading sign must raise a
+    clear ParseError instead of the old 'unknown identifier' cascade."""
+    src = "var input A : [3 3]\nvar output b : [3 3]\nb = {sign} A"
+    for sign in ("-", "+"):
+        with pytest.raises(dsl.ParseError, match="binary operator"):
+            dsl.parse(src.format(sign=sign))
+    with pytest.raises(dsl.ParseError, match="binary operator"):
+        dsl.parse("var input A : [3 3]\nvar output b : [3 3]\nb = A * - A")
+    # negative integers inside shapes/pairs fail with the same clarity
+    with pytest.raises(dsl.ParseError, match="unsigned"):
+        dsl.parse("var input A : [-3]")
+    with pytest.raises(dsl.ParseError, match="unsigned"):
+        dsl.parse(
+            "var input A : [3 3]\nvar output b : []\nb = A . [[0 -1]]"
+        )
+
+
+def test_blank_and_comment_only_programs_rejected():
+    for src in ("", "   \n\t", "// just a comment\n// another\n"):
+        with pytest.raises(dsl.ParseError, match="empty program"):
+            dsl.parse(src)
+
+
+def test_elem_qualifier_marks_element_vars():
+    src = """
+    var input S : [3 3]
+    var input elem u : [3 3 3]
+    var output elem v : [3 3 3]
+    v = S # S # S # u . [[1 6][3 7][5 8]]
+    """
+    prog = dsl.parse(src)
+    assert prog.element_vars == ("u", "v")
+    # markers merge with (and precede) the element_vars argument
+    prog = dsl.parse(src, element_vars=("v", "u"))
+    assert prog.element_vars == ("u", "v")
+    # a variable literally named 'elem' still declares fine
+    ok = dsl.parse(
+        "var input elem : [2 2]\nvar output o : [2 2]\no = elem * elem"
+    )
+    assert "elem" in ok.inputs
+    with pytest.raises(dsl.ParseError, match="inputs/outputs only"):
+        dsl.parse("var elem t : [2 2]")
+
+
 def test_use_before_assignment_rejected():
     src = """
     var input A : [3 3]

@@ -37,19 +37,45 @@ def test_plan_determinism():
 
 def test_auto_batch_matches_paper_channel_sizing():
     """The planner's E equals SimConfig.batch_for_channel for the paper's
-    256 MB pseudo-channel (Alveo U280: 8 GiB HBM2 / 32 channels)."""
+    256 MB pseudo-channel (Alveo U280: 8 GiB HBM2 / 32 channels), up to
+    the block padding that keeps E a VMEM-block multiple (prime-ish
+    channel quotients must never force the Pallas block divisor tiny)."""
     t = channels.ALVEO_U280
     assert t.channel_bytes == 256 * 2 ** 20
     for p in (7, 11):
         plan = dse.make_plan(p, target=t, policy="float32")
-        assert plan.batch_elements == SimConfig.batch_for_channel(
-            p, t.channel_bytes, 4
+        base = plan.batch_elements - plan.batch_pad_elements
+        assert base == SimConfig.batch_for_channel(p, t.channel_bytes, 4)
+        # padding did its job: E is block-composite, never block-starved
+        assert plan.batch_elements % plan.block_elements == 0
+        assert plan.block_elements * 2 >= layout.vmem_block_elements(
+            rewrite.optimize(dsl.inverse_helmholtz_program(p)), t,
+            bytes_per_scalar=4,
         )
+        if plan.batch_pad_elements:
+            assert "E auto-padded" in plan.report()
 
 
 def test_auto_batch_capped_by_problem_size():
     plan = dse.make_plan(11, target=channels.ALVEO_U280, n_eq=1000)
     assert plan.batch_elements == 1000
+
+
+def test_pad_batch_for_block():
+    """The E auto-padding rule: prime-ish batches round up to a block
+    multiple, composite-enough batches are left alone, and a problem-
+    size limit snaps down instead of padding past the data."""
+    assert layout.pad_batch_for_block(1021, 128) == (1024, 3)   # prime
+    assert layout.pad_batch_for_block(1000, 512) == (1000, 0)   # 500 | E
+    assert layout.pad_batch_for_block(100, 128) == (100, 0)     # E <= cap
+    assert layout.pad_batch_for_block(7, 1) == (7, 0)
+    assert layout.pad_batch_for_block(1021, 128, limit=1023) == (896, -125)
+    # chain form: E composite for the largest cap can still starve a
+    # smaller-cap stage (1018 = 2 * 509: fine for 512, block 2 for 256)
+    assert layout.pad_batch_for_block(1018, 512) == (1018, 0)
+    assert layout.pad_batch_for_block(
+        1018, 512, caps=(512, 256)
+    ) == (1024, 6)
 
 
 def test_plan_buffers_and_channels():

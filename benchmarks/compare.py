@@ -1,0 +1,193 @@
+"""Benchmark regression gate: compare a fresh ladder JSON against its
+checked-in baseline (``benchmarks/BENCH_<name>.json``).
+
+Usage::
+
+    python benchmarks/compare.py benchmarks/BENCH_chain_ladder.json \
+        chain_ladder.json
+
+Checks, in order of strength:
+
+  * **speedup floor** (machine-independent): when the baseline records a
+    ``stage_pipelining`` section, the current run's serial/pipelined
+    speedup must reach the baseline's ``min_speedup`` -- a ratio of two
+    runs on the *same* machine, so it holds across runner generations.
+  * **residency bytes** (deterministic): planner-derived byte counts
+    (``host_stream_bytes``) must not grow -- a regression here is a real
+    planner change, not noise.
+  * **us/batch per row** (noisy): a row regresses when its measured
+    us/batch exceeds baseline * (1 + threshold).  The threshold is
+    env-tunable (``BENCH_REGRESSION_THRESHOLD``, default 1.0 = allow up
+    to 2x) because CI wall clocks drift wildly; ratios above do the
+    precise policing.
+  * **row coverage**: every baseline row must still exist (a silently
+    dropped rung is a regression in what we measure).
+
+Escape hatches: ``BENCH_SKIP=1`` exits 0 immediately (CI wires this to
+the ``skip-bench-gate`` PR label).  The comparison table is printed and,
+when ``$GITHUB_STEP_SUMMARY`` is set, appended there as markdown.
+
+Exit codes: 0 pass/skip, 1 regression, 2 usage error.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import List, Optional, Tuple
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def _rows_by_name(doc: dict) -> dict:
+    return {r["name"]: r for r in doc.get("rows", [])}
+
+
+def compare(
+    baseline: dict, current: dict, *, threshold: float
+) -> Tuple[List[str], List[Tuple[str, float, float, str]]]:
+    """Returns (failures, table rows).  Table rows are
+    (name, baseline_us, current_us, verdict)."""
+    failures: List[str] = []
+    table: List[Tuple[str, float, float, str]] = []
+
+    base_rows = _rows_by_name(baseline)
+    cur_rows = _rows_by_name(current)
+    for name, base in base_rows.items():
+        cur = cur_rows.get(name)
+        if cur is None:
+            failures.append(f"row {name!r} missing from current run")
+            table.append((name, base["us_per_batch"], float("nan"),
+                          "MISSING"))
+            continue
+        b_us, c_us = base["us_per_batch"], cur["us_per_batch"]
+        if b_us > 0:
+            limit = b_us * (1.0 + threshold)
+            if c_us > limit:
+                failures.append(
+                    f"{name}: {c_us:.1f} us/batch exceeds baseline "
+                    f"{b_us:.1f} us/batch by more than the "
+                    f"{threshold:.0%} noise threshold"
+                )
+                table.append((name, b_us, c_us, "REGRESSED"))
+            else:
+                table.append((name, b_us, c_us, "ok"))
+        else:
+            table.append((name, b_us, c_us, "ok (untimed)"))
+        # deterministic planner outputs piggybacking on timing rows
+        b_bytes = base.get("host_stream_bytes")
+        c_bytes = cur.get("host_stream_bytes")
+        if b_bytes is not None and c_bytes is not None and c_bytes > b_bytes:
+            failures.append(
+                f"{name}: host_stream_bytes grew {b_bytes} -> {c_bytes} "
+                "(planner residency regression; deterministic, not noise)"
+            )
+    for name in cur_rows.keys() - base_rows.keys():
+        table.append((name, float("nan"), cur_rows[name]["us_per_batch"],
+                      "new (no baseline)"))
+
+    sp_base = baseline.get("stage_pipelining")
+    sp_cur = current.get("stage_pipelining")
+    if sp_base:
+        if sp_cur is None:
+            failures.append("stage_pipelining section missing from "
+                            "current run")
+        else:
+            floor = sp_base.get("min_speedup")
+            if floor is not None and sp_cur["speedup"] < floor:
+                failures.append(
+                    f"stage-pipelining speedup {sp_cur['speedup']:.2f}x "
+                    f"fell below the baseline floor {floor:.2f}x "
+                    f"(baseline measured {sp_base['speedup']:.2f}x)"
+                )
+            ratio_floor = sp_base.get("min_stage_ratio")
+            ratio = sp_cur.get("stage_ratio")
+            if ratio_floor is not None and ratio is not None \
+                    and ratio < ratio_floor:
+                failures.append(
+                    f"stage-pipelined execution fell to {ratio:.2f}x of "
+                    f"the same plan run back-to-back (floor "
+                    f"{ratio_floor:.2f}x; baseline measured "
+                    f"{sp_base.get('stage_ratio', 0):.2f}x) -- the "
+                    "executor itself regressed"
+                )
+    hs_base = baseline.get("host_stream_bytes")
+    hs_cur = current.get("host_stream_bytes")
+    if (isinstance(hs_base, dict) and isinstance(hs_cur, dict)
+            and hs_cur.get("chain", 0) > hs_base.get("chain", 0)):
+        failures.append(
+            f"chain host_stream_bytes grew {hs_base['chain']} -> "
+            f"{hs_cur['chain']} (planner residency regression)"
+        )
+    return failures, table
+
+
+def render_markdown(
+    name: str,
+    table: List[Tuple[str, float, float, str]],
+    failures: List[str],
+    current: dict,
+) -> str:
+    lines = [
+        f"### benchmark gate: {name} "
+        f"{'FAILED' if failures else 'passed'}",
+        "",
+        "| rung | baseline us/batch | current us/batch | verdict |",
+        "| --- | ---: | ---: | --- |",
+    ]
+    for row, b, c, verdict in table:
+        fmt = lambda v: "-" if v != v else f"{v:.1f}"  # NaN-safe
+        lines.append(f"| {row} | {fmt(b)} | {fmt(c)} | {verdict} |")
+    sp = current.get("stage_pipelining")
+    if sp:
+        b2b = sp.get("back_to_back_us_per_batch")
+        lines += [
+            "",
+            f"stage-pipelining speedup: **{sp['speedup']:.2f}x** "
+            f"(serial {sp['serial_us_per_batch']:.0f} us/batch"
+            + (f", back-to-back {b2b:.0f} us/batch" if b2b else "")
+            + f", pipelined {sp['pipelined_us_per_batch']:.0f} us/batch; "
+            f"floor {sp.get('min_speedup', '-')}x)",
+        ]
+    if failures:
+        lines += [""] + [f"- :x: {f}" for f in failures]
+    return "\n".join(lines) + "\n"
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    argv = sys.argv[1:] if argv is None else list(argv)
+    if os.environ.get("BENCH_SKIP"):
+        print("BENCH_SKIP set: benchmark regression gate skipped")
+        return 0
+    if len(argv) != 2:
+        print(__doc__, file=sys.stderr)
+        return 2
+    baseline_path, current_path = argv
+    try:
+        baseline, current = _load(baseline_path), _load(current_path)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+    threshold = float(os.environ.get("BENCH_REGRESSION_THRESHOLD", "1.0"))
+    failures, table = compare(baseline, current, threshold=threshold)
+
+    name = os.path.basename(baseline_path)
+    md = render_markdown(name, table, failures, current)
+    print(md)
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a") as f:
+            f.write(md + "\n")
+    if failures:
+        print(f"{len(failures)} regression(s) vs {baseline_path}; "
+              "re-run, raise BENCH_REGRESSION_THRESHOLD, or apply the "
+              "skip-bench-gate label if expected", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -30,7 +30,11 @@ def main() -> None:
     ap.add_argument("--batch-elements", type=int, default=0,
                     help="override E (0 = let the memory planner size it)")
     ap.add_argument("--prefetch-depth", type=int, default=1,
-                    help="K batches staged ahead (0 = serial baseline)")
+                    help="K batches staged ahead (0 = serial baseline); "
+                    "K>0 also turns on cross-batch stage pipelining")
+    ap.add_argument("--serial-stages", action="store_true",
+                    help="force the back-to-back stage schedule "
+                    "(bitwise-equal; isolates the pipelining win)")
     ap.add_argument("--policy", default="float32")
     ap.add_argument("--backend", default="xla",
                     help="per-stage backend: xla | staged | pallas")
@@ -64,11 +68,16 @@ def main() -> None:
           f"({'->'.join(system.stage_names)}) in "
           f"{plan.batches_for(args.n_eq)} batches of "
           f"{plan.batch_elements}")
-    res = system.run(n_eq=args.n_eq)
+    res = system.run(
+        n_eq=args.n_eq,
+        pipeline_stages=False if args.serial_stages else None,
+    )
     flops = res.elements * sum(
         s.program.total_flops() for s in system.chain.stages
     )
-    print(f"wall: {res.wall_s:.3f}s")
+    print(f"wall: {res.wall_s:.3f}s  "
+          f"({'stage-pipelined' if res.pipelined_stages else 'serial'} "
+          "schedule)")
     for q, v in sorted(res.checksums.items()):
         print(f"  checksum {q} = {v:.4f}")
     print(f"GFLOPS (paper Eq. 2 accounting): "

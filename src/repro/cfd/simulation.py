@@ -218,6 +218,9 @@ class ChainResult:
     plan: Optional[memchain.ChainPlan] = None
     #: full chain outputs, qualified "stage.output" (collect_outputs=True)
     outputs: Optional[Dict[str, np.ndarray]] = None
+    #: whether stages were cross-batch pipelined (one dispatch ring per
+    #: stage) or run back-to-back per batch (the serial baseline)
+    pipelined_stages: bool = False
 
 
 def _chain_batch_inputs(
@@ -264,15 +267,25 @@ def run_chain(
     inputs: Optional[Dict[str, np.ndarray]] = None,
     shared: Optional[Dict[str, np.ndarray]] = None,
     collect_outputs: bool = False,
+    pipeline_stages: Optional[bool] = None,
 ) -> ChainResult:
     """Execute a whole multi-operator pipeline off one ChainPlan.
 
-    Every batch flows through all stages back-to-back: bound streams
-    (e.g. interpolation's ``w`` into the gradient) never leave
-    the device -- exactly the residency the plan prices.  Host-streamed
-    inputs come from ``inputs`` (full arrays, qualified "stage.input")
-    or a deterministic synthetic stream; ``shared`` supplies the
-    batch-invariant operands by bare name (synthesized when omitted).
+    Bound streams (e.g. interpolation's ``w`` into the gradient) never
+    leave the device -- exactly the residency the plan prices.  The
+    execution schedule comes from the plan's ``pipeline`` spec: in
+    pipelined mode each stage gets its own dispatch ring and stage i of
+    batch k is dispatched alongside stage i+1 of batch k-1
+    (``memory.pipeline.run_stage_pipelined``); in serial mode stages run
+    back-to-back per batch -- the paper's baseline, bitwise-equal to the
+    pipelined schedule at float32.  ``pipeline_stages`` overrides the
+    plan's mode (e.g. to force the serial baseline for an equality
+    test or a ladder rung).
+
+    Host-streamed inputs come from ``inputs`` (full arrays, qualified
+    "stage.input") or a deterministic synthetic stream; ``shared``
+    supplies the batch-invariant operands by bare name (synthesized when
+    omitted).
 
     ``collect_outputs`` returns the concatenated chain outputs for
     verification against an unchained reference; by default only a
@@ -301,7 +314,29 @@ def run_chain(
             RuntimeWarning,
         )
     E = plan.batch_elements
-    depth = max(sp.prefetch_depth for sp in plan.stages)
+    pipe = plan.pipeline
+    if pipe is None:  # legacy plan: derive the spec from the stage Ks
+        pipe = memchain.derive_pipeline(
+            [sp.prefetch_depth for sp in plan.stages]
+        )
+    stage_depths = list(pipe.stage_depths)
+    if len(stage_depths) != len(chain.stages):
+        # a plan from a differently-staged compile still executes the
+        # compiled chain (warned above): carry the plan's deepest K as
+        # host staging and keep its mode with depth-1 rings
+        stage_depths = [max(stage_depths)] + (
+            [1 if pipe.pipelined else 0] * (len(chain.stages) - 1)
+        )
+    if pipeline_stages is None:
+        pipeline_stages = pipe.pipelined
+    if pipeline_stages:
+        depths = stage_depths
+        # forcing the mode on cannot pipeline a plan with no inter-stage
+        # ring depth: execution (and the reported flag) stays serial
+        pipeline_stages = len(depths) > 1 and any(d > 0 for d in depths[1:])
+    else:
+        # serial baseline: host staging only, stages back-to-back
+        depths = [max(stage_depths)] + [0] * (len(chain.stages) - 1)
     if n_eq is None:
         n_eq = E * (max_batches if max_batches else 4)
     if inputs is not None:
@@ -341,10 +376,9 @@ def run_chain(
             k: jax.device_put(v, elem_sharding) for k, v in batch.items()
         }
 
-    def compute(staged):
-        live: Dict[str, jax.Array] = {}
-        results: Dict[str, jax.Array] = {}
-        for i, s in enumerate(chain.stages):
+    def make_stage_fn(i: int, s: memchain.ChainStage):
+        def run_stage(staged, carry):
+            live: Dict[str, jax.Array] = dict(carry) if carry else {}
             env: Dict[str, jax.Array] = {}
             for name in s.program.inputs:
                 if name in chain.resolved[i]:
@@ -358,25 +392,30 @@ def run_chain(
                     env[name] = staged[f"{s.name}.{name}"]
             outs = s.compiled.batched_fn(env)
             for out_name, val in outs.items():
-                q = f"{s.name}.{out_name}"
-                live[q] = val
-                if q in out_names:
-                    results[q] = val
-        return results
+                live[f"{s.name}.{out_name}"] = val
+            return live
+
+        return run_stage
+
+    stage_fns = [
+        make_stage_fn(i, s) for i, s in enumerate(chain.stages)
+    ]
 
     if collect_outputs:
-        reduce_fn = lambda outs: jax.device_get(outs)
+        reduce_fn = lambda live: jax.device_get(
+            {q: live[q] for q in out_names}
+        )
     else:
-        reduce_fn = lambda outs: {
-            q: jnp.sum(v) for q, v in outs.items()
+        reduce_fn = lambda live: {
+            q: jnp.sum(live[q]) for q in out_names
         }
 
     t0 = time.perf_counter()
-    per_batch = mempipe.run_pipelined(
-        compute,
+    per_batch = mempipe.run_stage_pipelined(
+        stage_fns,
         _chain_batch_inputs(chain, E, n, seed, inputs),
         stage_fn=stage_batch,
-        depth=depth,
+        depths=depths,
         reduce_fn=reduce_fn,
     )
     wall = time.perf_counter() - t0
@@ -396,5 +435,5 @@ def run_chain(
                 checksums[q] += float(v)
     return ChainResult(
         batches=n, elements=n * E, wall_s=wall, checksums=checksums,
-        plan=plan, outputs=outputs,
+        plan=plan, outputs=outputs, pipelined_stages=bool(pipeline_stages),
     )

@@ -50,17 +50,15 @@ StageSpec = Sequence[Tuple[str, Sequence[str]]]
 def resolve_target(
     target: Union[None, str, channels.MemoryTarget],
 ) -> channels.MemoryTarget:
-    """None -> detect; str -> datasheet lookup ('alveo_u280' ~ 'alveo-u280')."""
-    if target is None:
-        return channels.detect_target()
-    if isinstance(target, channels.MemoryTarget):
-        return target
-    key = str(target).strip().lower().replace("_", "-")
-    if key not in channels.TARGETS:
-        raise FlowError(
-            f"unknown target {target!r}; known: {sorted(channels.TARGETS)}"
-        )
-    return channels.TARGETS[key]
+    """None -> detect; str -> datasheet lookup ('alveo_u280' ~ 'alveo-u280').
+
+    Delegates to :func:`repro.memory.channels.resolve_target` so the CLI,
+    the library API, and the benchmarks all normalize names identically;
+    typos raise a FlowError listing the known targets."""
+    try:
+        return channels.resolve_target(target)
+    except channels.UnknownTargetError as e:
+        raise FlowError(str(e)) from e
 
 
 # ---------------------------------------------------------------------------
@@ -361,8 +359,11 @@ class CompiledSystem:
         return tuple(s.name for s in self.chain.stages)
 
     def run(self, **kwargs):
-        """Execute the system through the K-deep chain pipeline driver
-        (see ``repro.cfd.simulation.run_chain`` for arguments)."""
+        """Execute the system through the chain pipeline driver: the
+        plan's ``pipeline`` spec decides whether stages are cross-batch
+        pipelined (one dispatch ring per stage) or run back-to-back
+        (pass ``pipeline_stages=False`` to force the serial baseline;
+        see ``repro.cfd.simulation.run_chain`` for all arguments)."""
         from ..cfd.simulation import run_chain  # lazy: cfd builds on flow
 
         return run_chain(self.chain, self.plan, **kwargs)

@@ -52,6 +52,10 @@ def _parse_args(argv: Optional[Sequence[str]]) -> argparse.Namespace:
                     help="execute a smoke run on synthetic data")
     ap.add_argument("--max-batches", type=int, default=2,
                     help="batches for --run (default 2)")
+    ap.add_argument("--serial-stages", action="store_true",
+                    help="force the back-to-back stage schedule for "
+                    "--run (the paper's baseline; default: the plan's "
+                    "pipeline mode)")
     return ap.parse_args(argv)
 
 
@@ -105,11 +109,16 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         print("dse ranking (top 10):")
         print(format_chain_ranking(system.candidates, limit=10))
     if args.run:
-        res = system.run(max_batches=args.max_batches)
+        res = system.run(
+            max_batches=args.max_batches,
+            pipeline_stages=False if args.serial_stages else None,
+        )
         print()
         print(
             f"ran {res.batches} batches x {res.plan.batch_elements} "
-            f"elements in {res.wall_s:.3f}s"
+            f"elements in {res.wall_s:.3f}s "
+            f"({'stage-pipelined' if res.pipelined_stages else 'serial'} "
+            "schedule)"
         )
         for q, v in sorted(res.checksums.items()):
             print(f"  checksum {q} = {v:.6g}")

@@ -17,8 +17,10 @@ CHARM-style and verifies the winners by measurement.
   plan      -- the MemoryPlan dataclasses and the Fig.-14-style report
 """
 from . import chain, channels, dse, layout, pipeline, plan
-from .chain import ChainPlan, ChainStage, ProgramChain, plan_chain
-from .channels import ALVEO_U280, CPU_HOST, TPU_V5E, MemoryTarget, detect_target
+from .chain import (ChainPlan, ChainStage, PipelineSpec, ProgramChain,
+                    derive_pipeline, plan_chain)
+from .channels import (ALVEO_U280, CPU_HOST, TPU_V5E, MemoryTarget,
+                       UnknownTargetError, detect_target, resolve_target)
 from .dse import (Candidate, ChainCandidate, ChainDesignSpace,
                   CostCorrection, DesignSpace, explore, explore_chain,
                   fit_correction, format_chain_ranking, make_plan,
@@ -28,6 +30,8 @@ from .plan import BufferSpec, CostBreakdown, MemoryPlan
 __all__ = [
     "chain", "channels", "dse", "layout", "pipeline", "plan",
     "MemoryTarget", "ALVEO_U280", "TPU_V5E", "CPU_HOST", "detect_target",
+    "UnknownTargetError", "resolve_target",
+    "PipelineSpec", "derive_pipeline",
     "Candidate", "DesignSpace", "explore", "make_plan", "pareto_front",
     "ChainCandidate", "ChainDesignSpace", "CostCorrection",
     "explore_chain", "fit_correction", "format_chain_ranking",

@@ -278,18 +278,99 @@ class StagePlan:
 
 
 @dataclasses.dataclass(frozen=True)
+class PipelineSpec:
+    """How the chain executor overlaps stages *across batches*.
+
+    ``mode == "pipelined"`` runs one dispatch ring per stage: stage i of
+    batch k is dispatched in the same tick as stage i+1 of batch k-1
+    (``memory.pipeline.run_stage_pipelined``), with the HBM-resident
+    inter-stage streams handed off on device.  ``mode == "serial"`` is
+    the paper's baseline: stages back-to-back per batch (host prefetch
+    only), kept for bitwise-equality tests and as the ladder's rung.
+    """
+
+    mode: str                       # "pipelined" | "serial"
+    stage_depths: Tuple[int, ...]   # dispatch-ring depth per stage
+    stage_skews: Tuple[int, ...]    # batches stage i lags behind stage 0
+    fill_batches: int               # pipeline fill (= drain) in batches
+
+    @property
+    def pipelined(self) -> bool:
+        return self.mode == "pipelined"
+
+
+def derive_pipeline(depths: Sequence[int]) -> PipelineSpec:
+    """The execution mode a per-stage depth vector implies: any positive
+    inter-stage ring depth turns cross-batch stage pipelining on."""
+    from . import pipeline as pipe_mod
+
+    skews = pipe_mod.stage_skews(depths)
+    pipelined = len(depths) > 1 and any(d > 0 for d in depths[1:])
+    return PipelineSpec(
+        mode="pipelined" if pipelined else "serial",
+        stage_depths=tuple(depths),
+        stage_skews=tuple(skews),
+        fill_batches=skews[-1],
+    )
+
+
+@dataclasses.dataclass(frozen=True)
 class ChainCost:
-    """Per-batch chain timing: stages run back-to-back on one batch."""
+    """Per-batch chain timing.
+
+    ``pipelined_stages=False`` prices the back-to-back schedule (stages
+    sequential per batch, each with its own transfer overlap);
+    ``pipelined_stages=True`` prices cross-batch stage pipelining: the
+    steady-state batch rate is set by the *slowest* stage alone, and the
+    first batch's full chain latency (fill + drain) is amortized over
+    ``n_batches``.
+    """
 
     stages: Tuple[CostBreakdown, ...]
+    #: cross-batch mode: per-stage dispatch rings overlap stage i of
+    #: batch k with stage i+1 of batch k-1
+    pipelined_stages: bool = False
+    #: pipeline fill in batches (the last stage's skew); reporting only
+    fill_batches: int = 0
+    n_batches: Optional[int] = None
 
     @property
     def t_serial(self) -> float:
         return sum(c.t_serial for c in self.stages)
 
     @property
-    def t_pipelined(self) -> float:
+    def t_back_to_back(self) -> float:
+        """Stages sequential per batch, per-stage transfer overlap."""
         return sum(c.t_pipelined for c in self.stages)
+
+    @property
+    def t_steady(self) -> float:
+        """Steady-state batch rate under stage pipelining: the slowest
+        stage's time -- every other stage hides behind it."""
+        return max(c.t_pipelined for c in self.stages)
+
+    @property
+    def t_fill(self) -> float:
+        """Amortized fill+drain cost per batch: the first batch pays the
+        full back-to-back chain latency before steady state, spread over
+        the run (0 when the batch count is unknown -- steady state)."""
+        if not self.n_batches:
+            return 0.0
+        return (self.t_back_to_back - self.t_steady) / self.n_batches
+
+    @property
+    def t_overlapped(self) -> float:
+        """Cross-batch pipelined time per batch: never worse than
+        back-to-back (n_batches=1 degenerates to it exactly)."""
+        return min(self.t_back_to_back, self.t_steady + self.t_fill)
+
+    @property
+    def t_pipelined(self) -> float:
+        """Effective predicted time per batch under the plan's mode."""
+        return (
+            self.t_overlapped if self.pipelined_stages
+            else self.t_back_to_back
+        )
 
     @property
     def bottleneck_stage(self) -> int:
@@ -298,8 +379,23 @@ class ChainCost:
         return times.index(max(times))
 
     @property
+    def bottleneck(self) -> str:
+        """The dominating stage's dominating cost term (the label the
+        measured-feedback CostCorrection attributes ratios to)."""
+        return self.stages[self.bottleneck_stage].bottleneck
+
+    @property
     def overlap_speedup(self) -> float:
         return self.t_serial / self.t_pipelined if self.t_pipelined else 1.0
+
+    @property
+    def stage_overlap_speedup(self) -> float:
+        """What cross-batch stage pipelining alone buys over the
+        back-to-back schedule."""
+        return (
+            self.t_back_to_back / self.t_overlapped
+            if self.t_overlapped else 1.0
+        )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -318,6 +414,9 @@ class ChainPlan:
     #: elements added to (negative: trimmed from) the auto-sized E so it
     #: is a multiple of every stage's VMEM block (0 for explicit E).
     batch_pad_elements: int = 0
+    #: cross-batch stage pipelining spec the executor runs off (derived
+    #: from the per-stage prefetch depths; None only on legacy plans).
+    pipeline: Optional[PipelineSpec] = None
 
     @property
     def buffers(self) -> Tuple[BufferSpec, ...]:
@@ -400,13 +499,29 @@ class ChainPlan:
                 f"  -> {c.bottleneck}-bound"
             )
         cc = self.cost
-        lines += [
-            "",
+        lines.append("")
+        if self.pipeline is not None:
+            pp = self.pipeline
+            lines.append(
+                f"  pipeline: mode={pp.mode}   stage depths "
+                f"[{','.join(str(d) for d in pp.stage_depths)}]   skews "
+                f"[{','.join(str(s) for s in pp.stage_skews)}]   "
+                f"fill/drain {pp.fill_batches} batches"
+            )
+            if pp.pipelined:
+                lines.append(
+                    f"    steady {cc.t_steady * 1e3:.3f} ms/batch + fill "
+                    f"{cc.t_fill * 1e3:.3f} ms/batch amortized   "
+                    f"(predicted stage-overlap speedup "
+                    f"{cc.stage_overlap_speedup:.2f}x over back-to-back "
+                    f"{cc.t_back_to_back * 1e3:.3f} ms/batch)"
+                )
+        lines.append(
             f"  chain serial {cc.t_serial * 1e3:.3f} ms/batch   "
             f"pipelined {cc.t_pipelined * 1e3:.3f} ms/batch   "
             f"(overlap speedup {cc.overlap_speedup:.2f}x, bottleneck "
-            f"stage {self.stages[cc.bottleneck_stage].name})",
-        ]
+            f"stage {self.stages[cc.bottleneck_stage].name})"
+        )
         return "\n".join(lines)
 
 
@@ -427,10 +542,16 @@ def plan_chain(
 
     ``backends`` overrides each stage's backend for planning (the DSE
     sweeps hypothetical per-stage backends this way); ``prefetch_depth``
-    may be one K for the whole chain or one per stage.  Deterministic:
-    same arguments, same plan.  ``_sched_cache`` (keyed by stage index
-    and scalar width) lets sweeps reuse staged-backend schedules across
-    design points instead of re-partitioning per candidate.
+    may be one K for the whole chain or one per stage -- stage 0's K
+    stages host batches ahead, stage i>0's K is its dispatch-ring depth
+    behind stage i-1, and any positive inter-stage depth turns on
+    cross-batch stage pipelining (the plan's ``pipeline`` spec, priced
+    by ``ChainCost.t_overlapped``: makespan set by the slowest stage
+    plus amortized fill/drain instead of the per-batch stage sum).
+    Deterministic: same arguments, same plan.  ``_sched_cache`` (keyed
+    by stage index and scalar width) lets sweeps reuse staged-backend
+    schedules across design points instead of re-partitioning per
+    candidate.
     """
     # local import: dse depends on this module for chain exploration
     from .dse import predict_cost
@@ -589,12 +710,19 @@ def plan_chain(
             )
         )
 
+    pipeline = derive_pipeline(depths)
     plan = ChainPlan(
         chain=chain.name, target=target, policy=pol.name,
         batch_elements=e, cu_count=cu_count,
         stages=tuple(stage_plans),
-        cost=ChainCost(stages=tuple(sp.cost for sp in stage_plans)),
+        cost=ChainCost(
+            stages=tuple(sp.cost for sp in stage_plans),
+            pipelined_stages=pipeline.pipelined,
+            fill_batches=pipeline.fill_batches,
+            n_batches=n_batches,
+        ),
         batch_pad_elements=pad,
+        pipeline=pipeline,
     )
     worst_blk = max(sp.block_working_set_bytes for sp in stage_plans)
     feasible, reason = True, ""

@@ -107,6 +107,35 @@ CPU_HOST = MemoryTarget(
 TARGETS = {t.name: t for t in (ALVEO_U280, TPU_V5E, CPU_HOST)}
 
 
+class UnknownTargetError(ValueError):
+    """A target name that matches no datasheet (after normalization)."""
+
+
+def canonical_target_name(name: str) -> str:
+    """One spelling per datasheet: case-insensitive, underscores and
+    dashes interchangeable (CI passes ``alveo-u280``, the Python API
+    historically used ``alveo_u280`` -- both must resolve)."""
+    return str(name).strip().lower().replace("_", "-")
+
+
+def resolve_target(target) -> MemoryTarget:
+    """None -> detect; MemoryTarget -> itself; str -> datasheet lookup
+    under :func:`canonical_target_name`.  Unknown names raise
+    :class:`UnknownTargetError` listing every known target."""
+    if target is None:
+        return detect_target()
+    if isinstance(target, MemoryTarget):
+        return target
+    key = canonical_target_name(target)
+    if key not in TARGETS:
+        raise UnknownTargetError(
+            f"unknown target {target!r}; known targets: "
+            f"{', '.join(sorted(TARGETS))} (underscores and dashes are "
+            "interchangeable)"
+        )
+    return TARGETS[key]
+
+
 def detect_target() -> MemoryTarget:
     """Pick the target matching the current JAX backend."""
     import jax

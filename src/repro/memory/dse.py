@@ -279,7 +279,9 @@ def fit_correction(cands: Sequence[Candidate]) -> CostCorrection:
     """Fit the per-term correction from every measured candidate
     (identity when nothing was measured).  Each measured run's
     measured/predicted ratio is attributed to the cost term its plan
-    predicts as the bottleneck."""
+    predicts as the bottleneck.  Accepts single-op and chain candidates
+    alike: a ChainPlan's ``cost.bottleneck`` is its bottleneck stage's
+    dominating term."""
     ratios: List[float] = []
     by_term: Dict[str, List[float]] = {}
     for c in cands:
@@ -437,11 +439,16 @@ class ChainDesignSpace:
 @dataclasses.dataclass
 class ChainCandidate:
     """One explored chain design point (ranked like Candidate; the
-    ``plan`` attribute makes :func:`pareto_front` work unchanged)."""
+    ``plan`` attribute makes :func:`pareto_front` and the measured-
+    feedback :func:`apply_correction` work unchanged -- ``ChainCost``
+    exposes the bottleneck stage's dominating term as its
+    ``bottleneck``)."""
 
     plan: "chain_mod.ChainPlan"
     predicted_s_per_element: float
     measured_s_per_element: Optional[float] = None
+    #: prediction after the measured-feedback correction (calibrate=True)
+    corrected_s_per_element: Optional[float] = None
 
     @property
     def verified(self) -> bool:
@@ -483,18 +490,32 @@ def explore_chain(
     space: Optional[ChainDesignSpace] = None,
     measure_top: int = 0,
     measure_batches: int = 4,
+    calibrate: bool = False,
 ) -> List[ChainCandidate]:
     """Sweep chain plans: per-stage backend combinations and prefetch
     depth under one shared (divisor-scaled) E.  Ranked best-first with
-    infeasible plans last, exactly like :func:`explore`.
+    infeasible plans last, exactly like :func:`explore`.  Depth>0
+    candidates are priced with the cross-batch stage-pipelining overlap
+    term (``ChainCost.t_overlapped``: slowest stage + amortized
+    fill/drain), so the sweep weighs the overlap the executor actually
+    delivers.
 
     ``measure_top`` verifies the k best feasible candidates whose
     planned backends match the chain's compiled ones by running the real
-    ``run_chain`` driver (others cannot be measured as-planned)."""
+    ``run_chain`` driver (others cannot be measured as-planned).
+    ``calibrate`` additionally fits the per-term :class:`CostCorrection`
+    from those measured runs (each ratio attributed to the bottleneck
+    stage's dominating term) and re-ranks every candidate by its
+    corrected prediction."""
     import itertools
 
     from . import chain as chain_mod  # local: chain imports predict_cost
 
+    if calibrate and not measure_top:
+        raise ValueError(
+            "calibrate=True fits the correction from measured runs; "
+            "set measure_top > 0"
+        )
     target = target if target is not None else detect_target()
     space = space or ChainDesignSpace()
     n_stages = len(chain.stages)
@@ -561,6 +582,8 @@ def explore_chain(
             if got is not None:
                 c.measured_s_per_element = got
                 measured += 1
+        if calibrate:
+            apply_correction(cands, fit_correction(cands))
     return cands
 
 

@@ -1,22 +1,33 @@
-"""K-deep transfer pipelining: the generalized ping/pong engine.
+"""Transfer + stage pipelining: the generalized ping/pong engine.
 
 The paper overlaps host->device transfer of batch k+1 with compute of
-batch k through a pair of HBM channel buffers (Fig. 14a).  JAX gives the
-same overlap for free *if* the driver (1) enqueues ``jax.device_put`` of
-upcoming batches before blocking on results and (2) defers the host sync
-by one batch so the dispatch queue never drains.  This module packages
-those two tricks behind one generic driver so every workload (CFD
+batch k through a pair of HBM channel buffers (Fig. 14a), and its
+multi-accelerator system keeps *every* pipeline stage busy on a
+different batch simultaneously.  JAX gives the same overlap for free
+*if* the driver (1) enqueues ``jax.device_put`` of upcoming batches
+before blocking on results, (2) defers the host sync by one batch so
+the dispatch queue never drains, and (3) dispatches the stages of a
+multi-operator chain *skewed* -- stage i of batch k in the same breath
+as stage i+1 of batch k-1 -- so no stage's dispatch ring ever idles
+waiting for the whole previous batch to finish.  This module packages
+those tricks behind two generic drivers so every workload (CFD
 simulation, benchmarks, tests) uses the identical machinery instead of
 hand-rolling the loop.
 
 ``depth`` is the plan's prefetch K: 0 = fully serial (stage, compute,
 sync -- the paper's baseline), 1 = classic double buffering, K>1 = deeper
 staging that also rides out host-side jitter.
+
+:func:`run_pipelined` is the single-stage K-deep engine;
+:func:`run_stage_pipelined` generalizes it to a whole chain with one
+dispatch ring per stage (per-stage depths), handing HBM-resident
+inter-stage values from producer to consumer without host round-trips.
 """
 from __future__ import annotations
 
 from collections import deque
-from typing import Any, Callable, Iterable, Iterator, List, Optional
+from typing import (Any, Callable, Dict, Iterable, Iterator, List, Optional,
+                    Sequence, Union)
 
 import jax
 
@@ -78,4 +89,110 @@ def run_pipelined(
         pending = out
     if pending is not None:
         results.append(jax.device_get(pending))
+    return results
+
+
+def stage_skews(depths: Sequence[int]) -> List[int]:
+    """How many batches each stage lags behind stage 0.
+
+    ``depths[0]`` is the host staging depth (it skews nothing -- staging
+    runs *ahead*); ``depths[i>0]`` is the dispatch-ring depth between
+    stage i-1 and stage i, i.e. how many batches of the inter-stage
+    stream may be in flight before stage i consumes the oldest.  Skews
+    accumulate: with per-ring depth 1 on a 3-stage chain, stage 2 works
+    on batch k-2 while stage 0 works on batch k.
+    """
+    skews = [0] * len(depths)
+    for i in range(1, len(depths)):
+        skews[i] = skews[i - 1] + depths[i]
+    return skews
+
+
+def run_stage_pipelined(
+    stage_fns: Sequence[Callable[[Any, Any], Any]],
+    batches: Iterable[Any],
+    *,
+    stage_fn: Callable[[Any], Any] = lambda x: x,
+    depths: Union[int, Sequence[int]] = 1,
+    reduce_fn: Optional[Callable[[Any], Any]] = None,
+    defer_sync: Optional[bool] = None,
+) -> List[Any]:
+    """Run every batch through a chain of stages, cross-batch pipelined.
+
+    Each ``stage_fns[i]`` is called as ``fn(staged, carry)`` where
+    ``staged`` is the batch's staged host input and ``carry`` is the
+    value returned by stage i-1 for the same batch (``None`` for stage
+    0); its return value is handed to stage i+1 *on device* -- the
+    HBM-resident inter-stage stream.  The last stage's carry is realized
+    (via ``reduce_fn``, then ``jax.device_get``) and the per-batch
+    results are returned in batch order.
+
+    ``depths`` is one dispatch-ring depth per stage (an int applies
+    chain-wide): ``depths[0]`` stages host batches ahead exactly like
+    :func:`run_pipelined`; ``depths[i>0]`` lets stage i run that many
+    batches behind stage i-1, so with any positive inter-stage depth the
+    dispatch order interleaves stage i of batch k with stage i+1 of
+    batch k-1 (software pipelining).  All inter-stage depths 0 degrades
+    to the back-to-back schedule of :func:`run_pipelined`.
+
+    Every batch still passes through every stage exactly once with
+    identical inputs, so results are bitwise-equal to the serial
+    schedule -- only the dispatch interleaving changes.
+    """
+    stage_fns = list(stage_fns)
+    n_stages = len(stage_fns)
+    if n_stages == 0:
+        raise ValueError("need at least one stage")
+    if isinstance(depths, int):
+        depths = [depths] * n_stages
+    else:
+        depths = list(depths)
+    if len(depths) != n_stages:
+        raise ValueError(f"need {n_stages} stage depths, got {len(depths)}")
+    if any(d < 0 for d in depths):
+        raise ValueError(f"stage depths must be >= 0, got {depths}")
+    if defer_sync is None:
+        defer_sync = any(d > 0 for d in depths)
+    skews = stage_skews(depths)
+    max_skew = skews[-1]
+
+    staged_seq = prefetch(batches, stage_fn, depths[0])
+    #: batch index -> [staged, carry]; holds a batch from the tick stage
+    #: 0 dispatches it until the last stage retires it (the window the
+    #: planner prices as ring replicas).
+    records: Dict[int, List[Any]] = {}
+    results: List[Any] = []
+    pending: deque = deque()
+
+    def retire(carry: Any) -> None:
+        value = reduce_fn(carry) if reduce_fn is not None else carry
+        if not defer_sync:
+            results.append(jax.device_get(value))
+            return
+        pending.append(value)
+        if len(pending) > 1:
+            results.append(jax.device_get(pending.popleft()))
+
+    n: Optional[int] = None  # total batches, known once the source drains
+    t = 0                    # tick: stage i processes batch t - skews[i]
+    while n is None or t < n + max_skew:
+        if n is None:
+            try:
+                records[t] = [next(staged_seq), None]
+            except StopIteration:
+                n = t
+                if n == 0:
+                    break
+        for i, fn in enumerate(stage_fns):
+            k = t - skews[i]
+            if k < 0 or (n is not None and k >= n):
+                continue  # pipeline fill (k<0) or drain (k>=n)
+            rec = records[k]
+            rec[1] = fn(rec[0], rec[1])
+        k = t - max_skew
+        if k >= 0 and (n is None or k < n):
+            retire(records.pop(k)[1])
+        t += 1
+    while pending:
+        results.append(jax.device_get(pending.popleft()))
     return results

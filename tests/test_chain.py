@@ -230,6 +230,54 @@ def test_run_chain_bitwise_matches_unchained(cfd_chain, rng):
         assert np.array_equal(want, res.outputs[q]), q
 
 
+def test_run_chain_stage_pipelined_bitwise_matches_serial(cfd_chain, rng):
+    """Acceptance: cross-batch stage pipelining (stage i of batch k
+    dispatched with stage i+1 of batch k-1) is bitwise-equal at float32
+    to the serial back-to-back schedule on the CFD chain."""
+    p, E, n_b = 5, 16, 4
+    n = E * n_b
+    inputs, shared = _chain_inputs(cfd_chain, n, p, rng)
+    plan = mchain.plan_chain(
+        cfd_chain, target=channels.CPU_HOST, batch_elements=E, n_eq=n,
+        prefetch_depth=(2, 1, 1),
+    )
+    assert plan.pipeline.pipelined
+    assert plan.pipeline.stage_skews == (0, 1, 2)
+    assert plan.cost.t_overlapped <= plan.cost.t_back_to_back
+    piped = simulation.run_chain(
+        cfd_chain, plan, inputs=inputs, shared=shared, collect_outputs=True
+    )
+    assert piped.pipelined_stages
+    serial = simulation.run_chain(
+        cfd_chain, plan, inputs=inputs, shared=shared,
+        collect_outputs=True, pipeline_stages=False,
+    )
+    assert not serial.pipelined_stages
+    assert piped.outputs.keys() == serial.outputs.keys()
+    for q in serial.outputs:
+        assert piped.outputs[q].dtype == serial.outputs[q].dtype
+        assert np.array_equal(piped.outputs[q], serial.outputs[q]), q
+    # the fully serial plan (all K=0) runs the serial schedule by default
+    flat = mchain.plan_chain(
+        cfd_chain, target=channels.CPU_HOST, batch_elements=E, n_eq=n,
+        prefetch_depth=0,
+    )
+    assert not flat.pipeline.pipelined
+    base = simulation.run_chain(
+        cfd_chain, flat, inputs=inputs, shared=shared, collect_outputs=True
+    )
+    assert not base.pipelined_stages
+    # forcing the mode on cannot pipeline a plan with no inter-stage
+    # rings: execution and the reported flag stay serial
+    forced = simulation.run_chain(
+        cfd_chain, flat, inputs=inputs, shared=shared,
+        max_batches=1, pipeline_stages=True,
+    )
+    assert not forced.pipelined_stages
+    for q in serial.outputs:
+        assert np.array_equal(base.outputs[q], serial.outputs[q]), q
+
+
 def test_run_chain_checksums_invariant_to_prefetch(cfd_chain, rng):
     p, E, n_b = 5, 8, 3
     inputs, shared = _chain_inputs(cfd_chain, E * n_b, p, rng)
@@ -259,6 +307,26 @@ def test_run_chain_warns_on_backend_mismatch(cfd_chain, rng):
     )
     with pytest.warns(RuntimeWarning, match="differ from the compiled"):
         simulation.run_chain(cfd_chain, plan, inputs=inputs, shared=shared)
+
+
+def test_run_chain_tolerates_plan_with_different_stage_count(cfd_chain, rng):
+    """Regression: a pipelined plan from a differently-staged compile
+    (stage count != the chain's) still executes the compiled chain as
+    the mismatch warning promises, spreading the plan's deepest K."""
+    p, E = 5, 8
+    inputs, shared = _chain_inputs(cfd_chain, E * 2, p, rng)
+    two = mchain.ProgramChain(cfd_chain.stages[:2])  # interp -> grad
+    plan = mchain.plan_chain(
+        two, target=channels.CPU_HOST, batch_elements=E,
+        prefetch_depth=1, n_eq=E * 2,
+    )
+    assert plan.pipeline.pipelined and len(plan.stages) == 2
+    with pytest.warns(RuntimeWarning, match="differ from the compiled"):
+        res = simulation.run_chain(
+            cfd_chain, plan, inputs=inputs, shared=shared, n_eq=E * 2
+        )
+    assert res.batches == 2 and res.pipelined_stages
+    assert all(np.isfinite(v) for v in res.checksums.values())
 
 
 def test_run_chain_auto_plans_when_missing(cfd_chain):

@@ -244,6 +244,67 @@ def test_explore_chain_ranked_and_pareto():
     assert len(combos) == 8
 
 
+def test_chain_cost_overlap_term():
+    """The cross-batch overlap term: a pipelined chain is priced by its
+    slowest stage plus amortized fill/drain, never worse than the
+    back-to-back schedule, and n_batches=1 degenerates to it exactly."""
+    from repro.memory import chain as mchain
+
+    chain = operators.build_cfd_chain(5)
+    piped = mchain.plan_chain(
+        chain, target=channels.ALVEO_U280, batch_elements=256,
+        prefetch_depth=1, n_eq=1 << 12,
+    )
+    flat = mchain.plan_chain(
+        chain, target=channels.ALVEO_U280, batch_elements=256,
+        prefetch_depth=(1, 0, 0), n_eq=1 << 12,
+    )
+    assert piped.cost.pipelined_stages and not flat.cost.pipelined_stages
+    assert piped.cost.t_steady == max(
+        c.t_pipelined for c in piped.cost.stages
+    )
+    assert piped.cost.t_pipelined == pytest.approx(
+        piped.cost.t_steady + piped.cost.t_fill
+    )
+    assert piped.cost.t_pipelined <= flat.cost.t_pipelined * (1 + 1e-12)
+    assert piped.cost.stage_overlap_speedup >= 1.0 - 1e-12
+    assert flat.cost.t_pipelined == pytest.approx(flat.cost.t_back_to_back)
+    # the correction hook: a chain's bottleneck is its bottleneck
+    # stage's dominating term
+    idx = piped.cost.bottleneck_stage
+    assert piped.cost.bottleneck == piped.cost.stages[idx].bottleneck
+    one = mchain.plan_chain(
+        chain, target=channels.ALVEO_U280, batch_elements=256,
+        prefetch_depth=1, n_eq=256,
+    )
+    assert one.cost.t_overlapped == pytest.approx(one.cost.t_back_to_back)
+
+
+def test_explore_chain_calibrate_requires_measurement():
+    chain = operators.build_cfd_chain(5)
+    with pytest.raises(ValueError, match="measure_top"):
+        dse.explore_chain(chain, target=channels.CPU_HOST, calibrate=True)
+
+
+@pytest.mark.slow
+def test_explore_chain_calibrate_smoke():
+    """Measure-then-calibrate on the real chain driver: every candidate
+    gains a corrected prediction, feasible candidates stay ranked
+    first."""
+    chain = operators.build_cfd_chain(5)
+    space = dse.ChainDesignSpace(
+        backends=("xla",), batch_divisors=(1,), prefetch_depths=(0, 1),
+    )
+    cands = dse.explore_chain(
+        chain, target=channels.CPU_HOST, n_eq=64, space=space,
+        measure_top=1, measure_batches=2, calibrate=True,
+    )
+    assert any(c.verified for c in cands)
+    assert all(c.corrected_s_per_element is not None for c in cands)
+    feas = [c.plan.feasible for c in cands]
+    assert feas == sorted(feas, reverse=True)
+
+
 @pytest.mark.slow
 def test_explore_chain_measures_matching_candidates():
     """measure_top verifies the best candidates whose planned backends

@@ -299,6 +299,35 @@ def test_example_sources_match_library_constants():
         assert set(a.element_vars) == set(b.element_vars)
 
 
+def test_target_normalization_dash_underscore_identical(capsys):
+    """CI passes --target alveo-u280, the Python API historically used
+    alveo_u280: both spellings (any case, stray whitespace) must resolve
+    to the same datasheet, in the library and through the CLI."""
+    for name in ("alveo-u280", "alveo_u280", "ALVEO_U280", " Alveo-U280 "):
+        assert channels.resolve_target(name) is channels.ALVEO_U280
+        assert flow.build.resolve_target(name) is channels.ALVEO_U280
+    assert channels.resolve_target(None) is channels.detect_target()
+    assert channels.resolve_target(channels.TPU_V5E) is channels.TPU_V5E
+    src = str(EXAMPLES / "inverse_helmholtz.cfd")
+    outs = []
+    for spelling in ("alveo-u280", "alveo_u280"):
+        assert flow.cli.main([src, "--target", spelling]) == 0
+        outs.append(capsys.readouterr().out)
+    assert outs[0] == outs[1]
+
+
+def test_target_typo_lists_known_targets():
+    with pytest.raises(
+        channels.UnknownTargetError, match="alveo-u280.*cpu-host.*tpu-v5e"
+    ):
+        channels.resolve_target("alveo-u28")
+    with pytest.raises(flow.FlowError, match="known targets"):
+        flow.build.resolve_target("alveo-u28")
+    # UnknownTargetError is a ValueError: existing CLI/compile callers
+    # that catch ValueError keep working
+    assert issubclass(channels.UnknownTargetError, ValueError)
+
+
 def test_flow_cli_error_paths(tmp_path, capsys):
     empty = tmp_path / "empty.cfd"
     empty.write_text("// nothing here\n")

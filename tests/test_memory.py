@@ -236,6 +236,154 @@ def test_pipelined_run_bitwise_matches_serial(rng):
         assert np.array_equal(np.asarray(a), np.asarray(b))
 
 
+def _record_stage(log, name, transform):
+    """A stage fn that logs its dispatch order and applies a pure
+    transform to the carry (stage 0 receives carry=None)."""
+
+    def fn(staged, carry):
+        log.append((name, staged))
+        return transform(staged if carry is None else carry)
+
+    return fn
+
+
+def test_stage_pipelined_depth0_matches_serial_composition():
+    """All-zero depths degrade to the back-to-back schedule: results and
+    dispatch order are exactly the serial composition's."""
+    log = []
+    fns = [
+        _record_stage(log, "s0", lambda x: x * 10),
+        _record_stage(log, "s1", lambda x: x + 1),
+    ]
+    out = mempipe.run_stage_pipelined(fns, range(3), depths=0)
+    assert out == [1, 11, 21]
+    assert log == [
+        ("s0", 0), ("s1", 0), ("s0", 1), ("s1", 1), ("s0", 2), ("s1", 2),
+    ]
+
+
+def test_stage_pipelined_skews_dispatch_order():
+    """With inter-stage ring depth 1, stage 1 of batch k-1 is dispatched
+    in the same tick as stage 0 of batch k -- the tentpole's software-
+    pipelined interleaving -- and results still come back in batch
+    order."""
+    log = []
+    fns = [
+        _record_stage(log, "s0", lambda x: x * 10),
+        _record_stage(log, "s1", lambda x: x + 1),
+    ]
+    out = mempipe.run_stage_pipelined(fns, range(4), depths=(1, 1))
+    assert out == [1, 11, 21, 31]
+    assert log == [
+        ("s0", 0),
+        ("s0", 1), ("s1", 0),
+        ("s0", 2), ("s1", 1),
+        ("s0", 3), ("s1", 2),
+        ("s1", 3),
+    ]
+
+
+def test_stage_pipelined_fill_drain_with_fewer_batches_than_depth():
+    """n_batches < total skew: every batch still flows through every
+    stage exactly once, in order, and the drain retires them in batch
+    order."""
+    log = []
+    fns = [
+        _record_stage(log, "s0", lambda x: x + 1),
+        _record_stage(log, "s1", lambda x: x * 2),
+        _record_stage(log, "s2", lambda x: x - 3),
+    ]
+    out = mempipe.run_stage_pipelined(fns, range(2), depths=(4, 3, 3))
+    assert out == [(0 + 1) * 2 - 3, (1 + 1) * 2 - 3]
+    for k in range(2):
+        assert [n for n, s in log if s == k] == ["s0", "s1", "s2"]
+    assert out == mempipe.run_stage_pipelined(fns, range(2), depths=0)
+    # an empty batch source is a no-op at any depth
+    assert mempipe.run_stage_pipelined(fns, [], depths=(4, 3, 3)) == []
+
+
+def test_stage_pipelined_reduce_and_defer_sync():
+    """reduce_fn maps the last stage's carry before any sync; deferred
+    sync holds exactly one realized value back until the next batch."""
+    events = []
+
+    def reduce_fn(x):
+        events.append(("reduce", x.v))
+        return x
+
+    class Traced:
+        """Quacks enough like a device value to observe device_get."""
+
+        def __init__(self, v):
+            self.v = v
+
+        def __array__(self, *a, **kw):  # jax.device_get realizes via this
+            events.append(("sync", self.v))
+            return np.asarray(self.v)
+
+    fns = [lambda staged, carry: Traced(staged * 10)]
+    out = mempipe.run_stage_pipelined(
+        fns, range(3), depths=1, reduce_fn=reduce_fn, defer_sync=True
+    )
+    assert [int(x) for x in out] == [0, 10, 20]
+    # deferred: batch k's sync happens only after batch k+1 was reduced
+    # (the dispatch queue never drains mid-run)
+    assert events == [
+        ("reduce", 0), ("reduce", 10), ("sync", 0),
+        ("reduce", 20), ("sync", 10), ("sync", 20),
+    ]
+    # defer_sync=False realizes each batch immediately after its reduce
+    events.clear()
+    out = mempipe.run_stage_pipelined(
+        fns, range(2), depths=0, reduce_fn=reduce_fn
+    )
+    assert [int(x) for x in out] == [0, 10]
+    assert events == [
+        ("reduce", 0), ("sync", 0), ("reduce", 10), ("sync", 10),
+    ]
+
+
+def test_stage_pipelined_validates_arguments():
+    fns = [lambda s, c: s]
+    with pytest.raises(ValueError, match="at least one stage"):
+        mempipe.run_stage_pipelined([], range(2))
+    with pytest.raises(ValueError, match=">= 0"):
+        mempipe.run_stage_pipelined(fns, range(2), depths=-1)
+    with pytest.raises(ValueError, match="stage depths"):
+        mempipe.run_stage_pipelined(fns, range(2), depths=(1, 1))
+
+
+def test_stage_pipelined_bitwise_matches_serial_on_device(rng):
+    """The skewed schedule changes dispatch order only: device results
+    are bit-identical to the serial composition (paper Fig. 14a
+    generalized across stages)."""
+    p, E = 5, 8
+    c = operators.build_inverse_helmholtz(p)
+    S = rng.uniform(-1, 1, (p, p)).astype(np.float32)
+    batches = [
+        {
+            "D": rng.uniform(-1, 1, (E, p, p, p)).astype(np.float32),
+            "u": rng.uniform(-1, 1, (E, p, p, p)).astype(np.float32),
+        }
+        for _ in range(4)
+    ]
+    fns = [
+        lambda staged, carry: c.batched_fn({"S": S, **staged})["v"],
+        lambda staged, carry: carry * 2.0,
+    ]
+    stage = lambda b: {k: jax.device_put(v) for k, v in b.items()}
+    serial = mempipe.run_stage_pipelined(
+        fns, batches, stage_fn=stage, depths=0
+    )
+    skewed = mempipe.run_stage_pipelined(
+        fns, batches, stage_fn=stage, depths=(2, 1)
+    )
+    assert len(serial) == len(skewed) == 4
+    for a, b in zip(serial, skewed):
+        assert a.dtype == b.dtype
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
 def test_simulation_driver_plan_resolves_batch():
     """No hardcoded E: the planner sizes the batch from the channel model."""
     cfg = SimConfig(p=5, n_eq=512)  # batch_elements unset

@@ -255,6 +255,81 @@ def memplan_ladder() -> None:
     )
 
 
+def _sharded_worker(p: int, E: int, n_b: int) -> None:
+    """Subprocess body for the sharded rungs: runs the 3-stage chain
+    under a 2-device placement (gradient stage element-sharded over both
+    devices, handoffs resharded between groups) and prints one JSON line
+    with the measurement.  Launched with
+    ``--xla_force_host_platform_device_count=2`` by the parent ladder --
+    the only way to exercise multi-device execution on a CPU container.
+    """
+    import json
+
+    from repro.cfd.simulation import run_chain
+    from repro.memory import chain as mchain
+    from repro.memory import channels as mchan
+    from repro.memory.placement import DeviceTopology
+
+    assert jax.device_count() == 2, jax.devices()
+    n_eq = E * n_b
+    target = mchan.detect_target()
+    chain = operators.build_cfd_chain(p)
+    flops_pe = sum(s.program.total_flops() for s in chain.stages)
+    rng = np.random.default_rng(7)
+    inputs = {
+        "interp.u": rng.uniform(-1, 1, (n_eq, p, p, p)).astype(np.float32),
+        "helmholtz.D": rng.uniform(
+            -1, 1, (n_eq, p, p, p)
+        ).astype(np.float32),
+    }
+    shared = {
+        name: rng.uniform(-1, 1, node.shape).astype(np.float32)
+        for name, node in sorted(chain.shared_operands().items())
+    }
+    plan = mchain.plan_chain(
+        chain, target=target, batch_elements=E, prefetch_depth=1,
+        cu_count=(1, 2, 1), topology=DeviceTopology.homogeneous(2),
+        n_eq=n_eq,
+    )
+    run_chain(chain, plan, inputs=inputs, shared=shared,
+              max_batches=2)  # warm
+    best = min(
+        (run_chain(chain, plan, inputs=inputs, shared=shared,
+                   n_eq=n_eq, max_batches=n_b)
+         for _ in range(3)),
+        key=lambda r: r.wall_s,
+    )
+    assert best.placement_groups is not None  # really ran multi-device
+    print(json.dumps({
+        "us_per_batch": best.wall_s / best.batches * 1e6,
+        "gflops": best.elements * flops_pe / best.wall_s / 1e9,
+        "groups": [list(g) for g in best.placement_groups],
+        "host_stream_bytes": plan.host_stream_bytes,
+        "pred_us": plan.cost.t_overlapped * 1e6,
+    }))
+
+
+def _run_sharded_rung(p: int, E: int, n_b: int) -> dict:
+    """Launch :func:`_sharded_worker` with 2 forced host devices."""
+    import json
+    import os
+    import subprocess
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    res = subprocess.run(
+        [sys.executable, __file__, "_sharded_worker",
+         str(p), str(E), str(n_b)],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    if res.returncode != 0:
+        raise RuntimeError(
+            f"sharded rung subprocess failed:\n{res.stderr[-3000:]}"
+        )
+    return json.loads(res.stdout.strip().splitlines()[-1])
+
+
 def chain_ladder() -> None:
     """The full CFD application as one ProgramChain.  Rungs compare the
     unchained baseline (every stage streams through the host, as three
@@ -346,6 +421,15 @@ def chain_ladder() -> None:
         emit(name, best.wall_s / best.batches * 1e6,
              best.elements * flops_pe / best.wall_s / 1e9,
              f"pred={pred * 1e6:.0f}us")
+
+    # sharded rung: the same chain under a 2-device placement (gradient
+    # stage element-sharded, handoffs resharded between groups), run in
+    # a subprocess with a forced host device count.  On this container
+    # both "devices" share one CPU, so the rung tracks the placement
+    # machinery's overhead rather than a speedup.
+    sh = _run_sharded_rung(p, E, n_b)
+    emit("chained_sharded_2dev", sh["us_per_batch"], sh["gflops"],
+         f"groups={sh['groups']};pred={sh['pred_us']:.0f}us")
 
     # the residency claim, in bytes: chain host streams vs the sum of
     # three standalone plans at the same E
@@ -484,6 +568,17 @@ def flow_ladder() -> None:
         "chain3_stage_pipelined", hand, piped_plan, E=sp_E, n_b=sp_n_b,
         pipeline_stages=True, reps=5,
     )
+    # sharded acceptance rung: same E/n_b as the chain3 pair, gradient
+    # stage sharded over a 2-device placement in a subprocess
+    sh = _run_sharded_rung(p, sp_E, sp_n_b)
+    _row("flow_ladder/chain3_sharded_2dev", sh["us_per_batch"],
+         f"{sh['gflops']:.3f}GFLOPS;groups={sh['groups']}")
+    rows.append({
+        "name": "chain3_sharded_2dev",
+        "us_per_batch": sh["us_per_batch"], "gflops": sh["gflops"],
+        "stages": 3, "host_stream_bytes": sh["host_stream_bytes"],
+    })
+
     speedup = us_serial / us_piped if us_piped else 0.0
     stage_ratio = us_b2b / us_piped if us_piped else 0.0
     _row("flow_ladder/stage_pipelining_speedup", 0.0,
@@ -566,6 +661,11 @@ BENCHES = {
 
 
 def main() -> None:
+    if len(sys.argv) > 1 and sys.argv[1] == "_sharded_worker":
+        _sharded_worker(
+            int(sys.argv[2]), int(sys.argv[3]), int(sys.argv[4])
+        )
+        return
     names = sys.argv[1:] or list(BENCHES)
     print("name,us_per_call,derived")
     for n in names:

@@ -20,7 +20,7 @@ from __future__ import annotations
 import dataclasses
 import time
 import warnings
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -31,6 +31,7 @@ from ..memory import chain as memchain
 from ..memory import channels as memchannels
 from ..memory import dse as memdse
 from ..memory import pipeline as mempipe
+from ..memory.placement import DeviceTopology
 from ..memory.plan import MemoryPlan
 from .operators import build_inverse_helmholtz, flops_per_element
 
@@ -221,6 +222,9 @@ class ChainResult:
     #: whether stages were cross-batch pipelined (one dispatch ring per
     #: stage) or run back-to-back per batch (the serial baseline)
     pipelined_stages: bool = False
+    #: per-stage local device groups the run actually executed on (None
+    #: when the placement degenerated to the single global mesh)
+    placement_groups: Optional[Tuple[Tuple[int, ...], ...]] = None
 
 
 def _chain_batch_inputs(
@@ -298,10 +302,16 @@ def run_chain(
         # the data bounds the problem -- derive n_eq before planning so
         # the auto-sized E can never exceed what the arrays hold
         n_eq = min(v.shape[0] for v in inputs.values())
+    local_devices = list(mesh.devices.flatten())
     if plan is None:
         plan = memchain.plan_chain(
             chain, target=memchannels.detect_target(),
-            cu_count=int(mesh.devices.size), n_eq=n_eq,
+            cu_count=len(local_devices),
+            topology=DeviceTopology(
+                n_devices=len(local_devices),
+                device_kind=local_devices[0].platform,
+            ),
+            n_eq=n_eq,
         )
     planned = tuple(sp.backend for sp in plan.stages)
     compiled = tuple(s.backend for s in chain.stages)
@@ -356,24 +366,71 @@ def run_chain(
     elem_sharding = NamedSharding(mesh, P("elements"))
     repl_sharding = NamedSharding(mesh, P())
 
-    shared_dev: Dict[str, jax.Array] = {}
+    # placement execution: one dispatch ring per device group.  A plan
+    # whose stage count matches the compiled chain and whose device
+    # groups fit the local pool runs each stage element-sharded over its
+    # own group's mesh, with the HBM-resident handoff resharded where it
+    # crosses groups; every degenerate placement (single device, plan
+    # for a bigger machine, stage-count mismatch) falls back to the
+    # single global mesh -- the exact pre-placement path.
+    place = getattr(plan, "placement", None)
+    groups = None
+    if place is not None and place.devices_used[-1] >= len(local_devices):
+        warnings.warn(
+            f"run_chain: plan placement spans "
+            f"{place.topology.n_devices} device(s) but only "
+            f"{len(local_devices)} are local; executing on the local "
+            "mesh instead.",
+            RuntimeWarning,
+        )
+    elif place is not None and place.n_stages == len(chain.stages):
+        groups = mempipe.placement_meshes(place, devices=local_devices)
+    if groups is not None:
+        stage_meshes = [element_mesh(list(g)) for g in groups]
+        stage_elem = [NamedSharding(m, P("elements")) for m in stage_meshes]
+        stage_repl = [NamedSharding(m, P()) for m in stage_meshes]
+    else:
+        stage_elem = [elem_sharding] * len(chain.stages)
+        stage_repl = [repl_sharding] * len(chain.stages)
+
+    shared_host: Dict[str, np.ndarray] = {}
     for k, (name, node) in enumerate(sorted(chain.shared_operands().items())):
         if shared is not None and name in shared:
-            host = np.asarray(shared[name])
+            shared_host[name] = np.asarray(shared[name])
         else:
             rng = np.random.default_rng(seed + 2 ** 31 + k)
-            host = rng.uniform(-1, 1, node.shape).astype(np.float32)
-        shared_dev[name] = jax.device_put(host, repl_sharding)
+            shared_host[name] = rng.uniform(
+                -1, 1, node.shape
+            ).astype(np.float32)
+    # batch-invariant operands live replicated once per distinct device
+    # group (one copy total on the single global mesh)
+    shared_by_group: Dict = {}
+    shared_for_stage: List[Dict[str, jax.Array]] = []
+    for i in range(len(chain.stages)):
+        key = groups[i] if groups is not None else None
+        if key not in shared_by_group:
+            shared_by_group[key] = {
+                name: jax.device_put(h, stage_repl[i])
+                for name, h in shared_host.items()
+            }
+        shared_for_stage.append(shared_by_group[key])
 
     out_names = [
         f"{s.name}.{n}"
         for i, s in enumerate(chain.stages)
         for n, _ in chain.chain_outputs(i)
     ]
+    #: qualified host stream -> consuming stage (its group stages it)
+    owner = {
+        f"{s.name}.{n}": i
+        for i, s in enumerate(chain.stages)
+        for n, _ in chain.host_element_inputs(i)
+    }
 
     def stage_batch(batch):
         return {
-            k: jax.device_put(v, elem_sharding) for k, v in batch.items()
+            k: jax.device_put(v, stage_elem[owner[k]])
+            for k, v in batch.items()
         }
 
     def make_stage_fn(i: int, s: memchain.ChainStage):
@@ -386,8 +443,8 @@ def run_chain(
                     env[name] = live[
                         f"{chain.stages[p_idx].name}.{out_name}"
                     ]
-                elif name in shared_dev:
-                    env[name] = shared_dev[name]
+                elif name in shared_for_stage[i]:
+                    env[name] = shared_for_stage[i][name]
                 else:
                     env[name] = staged[f"{s.name}.{name}"]
             outs = s.compiled.batched_fn(env)
@@ -400,6 +457,30 @@ def run_chain(
     stage_fns = [
         make_stage_fn(i, s) for i, s in enumerate(chain.stages)
     ]
+
+    # multi-group handoff: before stage i consumes a batch, reshard the
+    # HBM-resident streams it reads from producers on *other* groups
+    place_fns = None
+    if groups is not None:
+        def make_place_fn(i: int):
+            moves = sorted(
+                f"{chain.stages[p].name}.{out}"
+                for p, out in chain.resolved[i].values()
+                if groups[p] != groups[i]
+            )
+            if not moves:
+                return None
+            sh = stage_elem[i]
+
+            def place(staged, carry):
+                carry = dict(carry) if carry else {}
+                for q in moves:
+                    carry[q] = jax.device_put(carry[q], sh)
+                return staged, carry
+
+            return place
+
+        place_fns = [make_place_fn(i) for i in range(len(chain.stages))]
 
     if collect_outputs:
         reduce_fn = lambda live: jax.device_get(
@@ -417,6 +498,7 @@ def run_chain(
         stage_fn=stage_batch,
         depths=depths,
         reduce_fn=reduce_fn,
+        place_fns=place_fns,
     )
     wall = time.perf_counter() - t0
 
@@ -436,4 +518,8 @@ def run_chain(
     return ChainResult(
         batches=n, elements=n * E, wall_s=wall, checksums=checksums,
         plan=plan, outputs=outputs, pipelined_stages=bool(pipeline_stages),
+        placement_groups=(
+            tuple(tuple(sp.devices) for sp in place.stages)
+            if groups is not None else None
+        ),
     )

@@ -120,6 +120,9 @@ def classify_boundary_streams(
     appear in the result.
     """
     stage_of: Dict[int, int] = {}
+    stage_sets = [
+        {n.uid for n in nodes} for nodes in stage_nodes
+    ]
     for i, nodes in enumerate(stage_nodes):
         for n in nodes:
             stage_of[n.uid] = i
@@ -128,8 +131,11 @@ def classify_boundary_streams(
     for i, nodes in enumerate(stage_nodes):
         for n in nodes:
             for op in n.operands():
-                p = stage_of.get(op.uid)
-                if p is not None and p != i:
+                if op.uid in stage_sets[i]:
+                    # produced in this very stage (possibly a duplicated
+                    # element-free node): no boundary crossing
+                    continue
+                if op.uid in stage_of:
                     crossers[op.uid] = (
                         STREAM_BOTH if op.uid in output_uids
                         else STREAM_RESIDENT

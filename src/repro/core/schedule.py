@@ -276,9 +276,13 @@ def stage_partition(sched: Schedule) -> List[List[ir.Node]]:
     Group boundaries become chain-stage boundaries, with one adjustment:
     a group containing no element-dependent work (a pure function of
     shared operands, e.g. a precomputed operator product) cannot stream
-    batches on its own, so it is folded into the earliest group that
-    consumes one of its values.  Node order inside each stage follows the
-    program's topological order.
+    batches on its own, so its nodes are duplicated into *every* group
+    that consumes one of its values -- folding into only the earliest
+    consumer would leave the later consumers reading an element-free
+    cross-stage stream, which the flow rejects (it pipelines element
+    streams only).  The recompute is batch-invariant and tiny, exactly
+    the paper's precomputed-operand case.  Node order inside each stage
+    follows the program's topological order.
     """
     prog = sched.program
     elem_dep = prog.element_dependent_uids()
@@ -290,18 +294,22 @@ def stage_partition(sched: Schedule) -> List[List[ir.Node]]:
         if any(n.uid in elem_dep for n in stages[i]):
             continue
         produced = {n.uid for n in stages[i]}
-        consumer = None
-        for j in range(i + 1, len(stages)):
+        consumers = [
+            j for j in range(i + 1, len(stages))
             if any(
                 op.uid in produced
                 for n in stages[j] for op in n.operands()
-            ):
-                consumer = j
-                break
-        if consumer is None:
+            )
+        ]
+        if not consumers:
             continue  # feeds nothing later (an element-free output)
-        stages[consumer] = stages[i] + stages[consumer]
+        for j in consumers:
+            stages[j] = stages[i] + stages[j]
         stages[i] = []
-    return [
-        sorted(s, key=lambda n: topo_pos[n.uid]) for s in stages if s
-    ]
+    out: List[List[ir.Node]] = []
+    for s in stages:
+        if not s:
+            continue
+        dedup = list({n.uid: n for n in s}.values())
+        out.append(sorted(dedup, key=lambda n: topo_pos[n.uid]))
+    return out

@@ -35,6 +35,7 @@ from ..core.schedule import (Group, Schedule, schedule as make_schedule,
 from ..core.precision import POLICIES
 from ..memory import channels
 from ..memory.chain import ChainPlan, ChainStage, ProgramChain, plan_chain
+from ..memory.placement import DeviceTopology
 from . import patterns
 
 
@@ -438,7 +439,8 @@ def compile(
     vmem_budget: Optional[int] = None,
     batch_elements: Optional[int] = None,
     prefetch_depth: Union[int, Sequence[int]] = 1,
-    cu_count: int = 1,
+    cu_count: Union[int, Sequence[int]] = 1,
+    devices: Optional[int] = None,
     n_eq: Optional[int] = None,
     channel_bytes: Optional[int] = None,
     dse: bool = False,
@@ -455,9 +457,15 @@ def compile(
     per-stage ``backends`` sequence is given; ``pallas`` stages are
     structurally matched to hand-tiled kernels (``stage_blocks`` pins
     their VMEM block size, e.g. from a prior plan's per-stage
-    ``block_elements``).  ``dse=True`` sweeps chain design points and
-    adopts the best feasible plan, recompiling stages if the winning
-    backends differ.
+    ``block_elements``).  ``cu_count`` (one value or one per stage) and
+    ``devices`` (the topology's device count; default: just enough for
+    the widest stage, ``0`` = detect the local pool) place each stage's
+    CU group on an explicit :class:`DeviceTopology` -- the plan's
+    ``placement`` section prices stages contending for shared devices.
+    ``dse=True`` sweeps chain design points -- including joint per-stage
+    ``(cu, depth)`` placements over that topology -- and adopts the best
+    feasible plan, recompiling stages if the winning backends (or any
+    Pallas stage's VMEM ``block_elements``) differ.
     """
     if isinstance(policy, str):
         if policy not in POLICIES:
@@ -519,10 +527,18 @@ def compile(
     )
     chain = ProgramChain(chain_stages)
 
+    if devices is not None and devices == 0:
+        topology = DeviceTopology.detect()
+    elif devices is not None:
+        topology = DeviceTopology.homogeneous(devices)
+    else:
+        topology = None  # plan_chain sizes it to the widest stage
+
     plan = plan_chain(
         chain, target=target, policy=pol.name, backends=effective,
         batch_elements=batch_elements, prefetch_depth=prefetch_depth,
-        cu_count=cu_count, n_eq=n_eq, channel_bytes=channel_bytes,
+        cu_count=cu_count, topology=topology, n_eq=n_eq,
+        channel_bytes=channel_bytes,
     )
 
     candidates = None
@@ -532,7 +548,7 @@ def compile(
         space = dse_space or dse_mod.ChainDesignSpace(policies=(pol.name,))
         candidates = dse_mod.explore_chain(
             chain, target=target, n_eq=n_eq if n_eq else 1 << 16,
-            space=space, measure_top=measure_top,
+            space=space, topology=topology, measure_top=measure_top,
         )
         winner = next((c for c in candidates if c.plan.feasible), None)
         if winner is not None:
@@ -541,7 +557,16 @@ def compile(
             won_pol = (
                 POLICIES[plan.policy] if plan.policy != pol.name else pol
             )
-            if won != effective or won_pol is not pol:
+            # a Pallas stage bakes its VMEM block into the compiled
+            # kernel, so a winner that differs only in E/block (same
+            # backends + policy) still forces a recompile -- otherwise
+            # the kernel's block and the plan's block_elements diverge
+            blocks_stale = any(
+                be == "pallas" and sp.block_elements
+                and st.name not in stage_blocks
+                for st, be, sp in zip(stage_specs, effective, plan.stages)
+            )
+            if won != effective or won_pol is not pol or blocks_stale:
                 blocks = dict(stage_blocks)
                 for sp in plan.stages:
                     if sp.block_elements:
@@ -560,10 +585,7 @@ def compile(
                     chain, target=target, policy=pol.name,
                     backends=effective,
                     batch_elements=plan.batch_elements,
-                    prefetch_depth=[
-                        sp.prefetch_depth for sp in plan.stages
-                    ],
-                    cu_count=plan.cu_count, n_eq=n_eq,
+                    placement=plan.placement, n_eq=n_eq,
                     channel_bytes=channel_bytes,
                 )
 

@@ -43,7 +43,13 @@ def _parse_args(argv: Optional[Sequence[str]]) -> argparse.Namespace:
     ap.add_argument("--batch-elements", type=int, default=None,
                     help="override E (default: planner auto-sizes + pads)")
     ap.add_argument("--prefetch-depth", type=int, default=1)
-    ap.add_argument("--cu-count", type=int, default=1)
+    ap.add_argument("--cu-count", default="1",
+                    help="CUs per stage: one int (chain-wide) or a "
+                    "comma-separated per-stage vector")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="device-topology size the stage CU groups are "
+                    "placed on (default: just enough for the widest "
+                    "stage; 0 = detect the local JAX device pool)")
     ap.add_argument("--n-eq", type=int, default=None)
     ap.add_argument("--dse", action="store_true",
                     help="sweep chain design points, adopt the best "
@@ -82,6 +88,15 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     if args.backends:
         backends = tuple(b.strip() for b in args.backends.split(","))
     try:
+        cu_parts = [c.strip() for c in str(args.cu_count).split(",")]
+        cu_count = (
+            int(cu_parts[0]) if len(cu_parts) == 1
+            else [int(c) for c in cu_parts]
+        )
+    except ValueError:
+        print(f"error: bad --cu-count {args.cu_count!r}", file=sys.stderr)
+        return 2
+    try:
         system = build.compile(
             source,
             name=prog_name,
@@ -93,7 +108,8 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
             max_stages=args.max_stages,
             batch_elements=args.batch_elements,
             prefetch_depth=args.prefetch_depth,
-            cu_count=args.cu_count,
+            cu_count=cu_count,
+            devices=args.devices,
             n_eq=args.n_eq,
             dse=args.dse,
         )

@@ -16,11 +16,13 @@ CHARM-style and verifies the winners by measurement.
                measured-feedback CostCorrection
   plan      -- the MemoryPlan dataclasses and the Fig.-14-style report
 """
-from . import chain, channels, dse, layout, pipeline, plan
+from . import chain, channels, dse, layout, pipeline, placement, plan
 from .chain import (ChainPlan, ChainStage, PipelineSpec, ProgramChain,
                     derive_pipeline, plan_chain)
 from .channels import (ALVEO_U280, CPU_HOST, TPU_V5E, MemoryTarget,
                        UnknownTargetError, detect_target, resolve_target)
+from .placement import (DeviceTopology, PlacementError, PlacementPlan,
+                        StagePlacement, place_chain)
 from .dse import (Candidate, ChainCandidate, ChainDesignSpace,
                   CostCorrection, DesignSpace, explore, explore_chain,
                   fit_correction, format_chain_ranking, make_plan,
@@ -28,9 +30,11 @@ from .dse import (Candidate, ChainCandidate, ChainDesignSpace,
 from .plan import BufferSpec, CostBreakdown, MemoryPlan
 
 __all__ = [
-    "chain", "channels", "dse", "layout", "pipeline", "plan",
+    "chain", "channels", "dse", "layout", "pipeline", "placement", "plan",
     "MemoryTarget", "ALVEO_U280", "TPU_V5E", "CPU_HOST", "detect_target",
     "UnknownTargetError", "resolve_target",
+    "DeviceTopology", "PlacementError", "PlacementPlan", "StagePlacement",
+    "place_chain",
     "PipelineSpec", "derive_pipeline",
     "Candidate", "DesignSpace", "explore", "make_plan", "pareto_front",
     "ChainCandidate", "ChainDesignSpace", "CostCorrection",

@@ -26,6 +26,7 @@ aggregates, rendered by ``report()`` like the single-program plan.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from ..core import ir
@@ -34,6 +35,7 @@ from ..core.precision import POLICIES
 from ..core.schedule import Schedule, schedule as make_schedule
 from . import layout
 from .channels import MemoryTarget, detect_target
+from .placement import DeviceTopology, PlacementPlan, place_chain
 from .plan import (BufferSpec, CostBreakdown, channels_used,
                    hbm_stream_bytes, host_stream_bytes)
 
@@ -275,6 +277,10 @@ class StagePlan:
     cost: CostBreakdown
     block_elements: int = 0
     block_working_set_bytes: int = 0
+    #: CUs (mesh devices) the stage shards its element batch over, and
+    #: the topology device ids it owns (from the plan's placement).
+    cu_count: int = 1
+    devices: Tuple[int, ...] = (0,)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -323,7 +329,13 @@ class ChainCost:
     ``pipelined_stages=True`` prices cross-batch stage pipelining: the
     steady-state batch rate is set by the *slowest* stage alone, and the
     first batch's full chain latency (fill + drain) is amortized over
-    ``n_batches``.
+    ``n_batches``.  ``contention`` (from the plan's
+    :class:`~repro.memory.placement.PlacementPlan`) is the number of
+    stages sharing each stage's device group: under stage pipelining all
+    stages are live on different batches simultaneously, so a stage's
+    device-side terms (compute, HBM) are time-sliced ``contention``-fold
+    -- this is how replication and overlap competing for the same
+    devices is priced *before* execution.
     """
 
     stages: Tuple[CostBreakdown, ...]
@@ -333,6 +345,11 @@ class ChainCost:
     #: pipeline fill in batches (the last stage's skew); reporting only
     fill_batches: int = 0
     n_batches: Optional[int] = None
+    #: per-stage device-sharing multiplier (empty = disjoint groups)
+    contention: Tuple[int, ...] = ()
+
+    def _contention(self, i: int) -> int:
+        return self.contention[i] if self.contention else 1
 
     @property
     def t_serial(self) -> float:
@@ -344,10 +361,24 @@ class ChainCost:
         return sum(c.t_pipelined for c in self.stages)
 
     @property
+    def stage_steady_times(self) -> Tuple[float, ...]:
+        """Per-stage steady-state time under stage pipelining: the
+        stage's roofline with its device terms scaled by how many
+        pipeline stages time-slice its devices.  The host link is billed
+        uncontended -- it is shared chain-wide in every schedule."""
+        out = []
+        for i, c in enumerate(self.stages):
+            k = self._contention(i) if self.pipelined_stages else 1
+            out.append(
+                max(c.t_host, k * max(c.t_compute, c.t_hbm)) + c.t_overhead
+            )
+        return tuple(out)
+
+    @property
     def t_steady(self) -> float:
         """Steady-state batch rate under stage pipelining: the slowest
-        stage's time -- every other stage hides behind it."""
-        return max(c.t_pipelined for c in self.stages)
+        *contended* stage -- every other stage hides behind it."""
+        return max(self.stage_steady_times)
 
     @property
     def t_fill(self) -> float:
@@ -375,8 +406,11 @@ class ChainCost:
     @property
     def bottleneck_stage(self) -> int:
         """Index of the stage dominating the pipelined chain time."""
-        times = [c.t_pipelined for c in self.stages]
-        return times.index(max(times))
+        times = (
+            self.stage_steady_times if self.pipelined_stages
+            else [c.t_pipelined for c in self.stages]
+        )
+        return list(times).index(max(times))
 
     @property
     def bottleneck(self) -> str:
@@ -406,7 +440,9 @@ class ChainPlan:
     target: MemoryTarget
     policy: str
     batch_elements: int         # shared E, co-sized over all stages
-    cu_count: int
+    #: per-stage (cu_count, prefetch_depth) + stage -> device-group
+    #: assignment over the explicit topology the plan was made for
+    placement: PlacementPlan
     stages: Tuple[StagePlan, ...]
     cost: ChainCost
     feasible: bool = True
@@ -417,6 +453,16 @@ class ChainPlan:
     #: cross-batch stage pipelining spec the executor runs off (derived
     #: from the per-stage prefetch depths; None only on legacy plans).
     pipeline: Optional[PipelineSpec] = None
+
+    @property
+    def cu_count(self) -> int:
+        """Devices the plan needs locally: the widest stage group (the
+        historical chain-wide scalar, now derived from the placement)."""
+        return self.placement.max_cu_count
+
+    @property
+    def cu_counts(self) -> Tuple[int, ...]:
+        return self.placement.cu_counts
 
     @property
     def buffers(self) -> Tuple[BufferSpec, ...]:
@@ -457,7 +503,7 @@ class ChainPlan:
         lines = [
             f"ChainPlan {self.chain}  target={t.name}  policy={self.policy}",
             f"  E={self.batch_elements} elements/batch (co-sized)   "
-            f"CUs={self.cu_count}   "
+            f"CUs=[{','.join(str(c) for c in self.cu_counts)}]   "
             f"feasible={'yes' if self.feasible else 'NO: ' + self.infeasible_reason}",
             f"  channels: {self.channels_used}/{t.n_channels} used   "
             f"resident {self.resident_bytes / mib:.1f} MiB "
@@ -478,7 +524,7 @@ class ChainPlan:
             lines += [
                 "",
                 f"  stage {sp.name}  backend={sp.backend}  "
-                f"K={sp.prefetch_depth}  "
+                f"K={sp.prefetch_depth}  CU={sp.cu_count}  "
                 f"BE={sp.block_elements} "
                 f"(vmem ws {sp.block_working_set_bytes / mib:.2f} MiB)",
                 f"    {'buffer':<20} {'role':<9} {'elem B':>7} "
@@ -500,6 +546,7 @@ class ChainPlan:
             )
         cc = self.cost
         lines.append("")
+        lines += self.placement.describe()
         if self.pipeline is not None:
             pp = self.pipeline
             lines.append(
@@ -533,7 +580,9 @@ def plan_chain(
     backends: Optional[Sequence[str]] = None,
     batch_elements: Optional[int] = None,
     prefetch_depth: Union[int, Sequence[int]] = 1,
-    cu_count: int = 1,
+    cu_count: Union[int, Sequence[int]] = 1,
+    topology: Optional[DeviceTopology] = None,
+    placement: Optional[PlacementPlan] = None,
     n_eq: Optional[int] = None,
     channel_bytes: Optional[int] = None,
     _sched_cache: Optional[Dict[Tuple[int, int], Schedule]] = None,
@@ -542,16 +591,21 @@ def plan_chain(
 
     ``backends`` overrides each stage's backend for planning (the DSE
     sweeps hypothetical per-stage backends this way); ``prefetch_depth``
-    may be one K for the whole chain or one per stage -- stage 0's K
-    stages host batches ahead, stage i>0's K is its dispatch-ring depth
-    behind stage i-1, and any positive inter-stage depth turns on
-    cross-batch stage pipelining (the plan's ``pipeline`` spec, priced
-    by ``ChainCost.t_overlapped``: makespan set by the slowest stage
-    plus amortized fill/drain instead of the per-batch stage sum).
-    Deterministic: same arguments, same plan.  ``_sched_cache`` (keyed
-    by stage index and scalar width) lets sweeps reuse staged-backend
-    schedules across design points instead of re-partitioning per
-    candidate.
+    and ``cu_count`` may be one value for the whole chain or one per
+    stage -- stage 0's K stages host batches ahead, stage i>0's K is its
+    dispatch-ring depth behind stage i-1, and any positive inter-stage
+    depth turns on cross-batch stage pipelining (the plan's ``pipeline``
+    spec, priced by ``ChainCost.t_overlapped``: makespan set by the
+    slowest *contended* stage plus amortized fill/drain instead of the
+    per-batch stage sum).  The per-stage CU counts and ring depths are
+    co-scheduled over an explicit :class:`DeviceTopology` (default: just
+    enough devices for the widest stage, so element sharding and the
+    pipeline's dispatch rings visibly compete for them); pass a larger
+    ``topology`` -- or a full ``placement`` -- to plan disjoint device
+    groups.  Deterministic: same arguments, same plan.  ``_sched_cache``
+    (keyed by stage index and scalar width) lets sweeps reuse
+    staged-backend schedules across design points instead of
+    re-partitioning per candidate.
     """
     # local import: dse depends on this module for chain exploration
     from .dse import predict_cost
@@ -567,15 +621,34 @@ def plan_chain(
         backends = [s.backend for s in chain.stages]
     if len(backends) != n_stages:
         raise ValueError(f"need {n_stages} backends, got {len(backends)}")
-    if isinstance(prefetch_depth, int):
-        depths = [prefetch_depth] * n_stages
+    if placement is not None:
+        if placement.n_stages != n_stages:
+            raise ValueError(
+                f"placement has {placement.n_stages} stages, chain has "
+                f"{n_stages}"
+            )
+        place = placement
     else:
-        depths = list(prefetch_depth)
-        if len(depths) != n_stages:
-            raise ValueError(f"need {n_stages} prefetch depths")
+        if isinstance(cu_count, int):
+            cus = [cu_count] * n_stages
+        else:
+            cus = list(cu_count)
+            if len(cus) != n_stages:
+                raise ValueError(f"need {n_stages} cu counts, got {len(cus)}")
+        if isinstance(prefetch_depth, int):
+            depth_vec = [prefetch_depth] * n_stages
+        else:
+            depth_vec = list(prefetch_depth)
+            if len(depth_vec) != n_stages:
+                raise ValueError(f"need {n_stages} prefetch depths")
+        if topology is None:
+            topology = DeviceTopology.homogeneous(max(1, max(cus)))
+        place = place_chain(topology, cus, depth_vec)
+    depths = list(place.prefetch_depths)
     any_prefetch = any(d > 0 for d in depths)
 
     pad = 0
+    blk_align = 1
     if batch_elements is not None:
         e = batch_elements
     else:
@@ -592,12 +665,29 @@ def plan_chain(
             )
             for s in chain.stages
         ]
+        blk_align = max(caps)
         e, pad = layout.pad_batch_for_block(
-            e, max(caps), limit=n_eq, caps=caps
+            e, blk_align, limit=n_eq, caps=caps
         )
     e = max(1, int(e))
     if n_eq is not None:
         e = min(e, max(1, n_eq))
+    # element sharding: every stage splits the batch evenly over its CU
+    # group, so E must be a multiple of every group size.  Auto-sized E
+    # is snapped down (the trim is reported via batch_pad_elements),
+    # preserving the VMEM block alignment just established where it can
+    # -- snapping to a bare multiple of the shard would collapse every
+    # stage's Pallas block divisor (the pad_batch_for_block regression).
+    # An explicit indivisible E is reported infeasible below.
+    shard = 1
+    for g in place.cu_counts:
+        shard = shard * g // math.gcd(shard, g)
+    if e % shard and batch_elements is None and e > shard:
+        align = shard * blk_align // math.gcd(shard, blk_align)
+        snap = align if e >= align else shard
+        trim = e % snap
+        e -= trim
+        pad -= trim
     n_batches = max(1, n_eq // e) if n_eq else None
 
     alloc = layout.ChannelAllocator(target.n_channels)
@@ -691,7 +781,7 @@ def plan_chain(
             host_bytes=host_stream_bytes(bufs),
             hbm_bytes=stage_hbm,
             channels_used=channels_used(touched),
-            prefetch_depth=depth, cu_count=cu_count,
+            prefetch_depth=depth, cu_count=place.stages[i].cu_count,
             n_batches=n_batches,
         )
         blk_cap = layout.vmem_block_elements(
@@ -707,26 +797,35 @@ def plan_chain(
                 block_working_set_bytes=layout.block_working_set_bytes(
                     prog, blk, bytes_per_scalar=bps
                 ),
+                cu_count=place.stages[i].cu_count,
+                devices=place.stages[i].devices,
             )
         )
 
     pipeline = derive_pipeline(depths)
     plan = ChainPlan(
         chain=chain.name, target=target, policy=pol.name,
-        batch_elements=e, cu_count=cu_count,
+        batch_elements=e, placement=place,
         stages=tuple(stage_plans),
         cost=ChainCost(
             stages=tuple(sp.cost for sp in stage_plans),
             pipelined_stages=pipeline.pipelined,
             fill_batches=pipeline.fill_batches,
             n_batches=n_batches,
+            contention=place.contention,
         ),
         batch_pad_elements=pad,
         pipeline=pipeline,
     )
     worst_blk = max(sp.block_working_set_bytes for sp in stage_plans)
     feasible, reason = True, ""
-    if plan.resident_bytes > target.usable_hbm_bytes:
+    if e % shard:
+        feasible = False
+        reason = (
+            f"batch E={e} does not shard evenly over the stage CU "
+            f"groups (needs a multiple of {shard})"
+        )
+    elif plan.resident_bytes > target.usable_hbm_bytes:
         feasible = False
         reason = (
             f"resident {plan.resident_bytes / 2**20:.0f} MiB exceeds "

@@ -426,7 +426,11 @@ def explore(
 class ChainDesignSpace:
     """Sweep axes for a ProgramChain: per-stage backends are crossed
     (every combination up to ``max_backend_combos``), E divisors divide
-    the co-sized chain E, and each prefetch depth applies chain-wide."""
+    the co-sized chain E, and ``prefetch_depths`` x ``cu_counts`` form
+    the *per-stage* placement menu: besides the chain-wide uniform
+    sweep, :func:`explore_chain` searches joint per-stage
+    ``(cu_count, prefetch_depth)`` vectors over the topology, keeping
+    the ``max_placements`` best under a monotone-pruned frontier."""
 
     backends: Tuple[str, ...] = ("xla", "staged")
     policies: Tuple[str, ...] = ("float32",)
@@ -434,6 +438,10 @@ class ChainDesignSpace:
     prefetch_depths: Tuple[int, ...] = (0, 1, 2)
     cu_counts: Tuple[int, ...] = (1,)
     max_backend_combos: int = 16
+    #: joint per-stage placements kept per (policy, backends, E) point
+    max_placements: int = 16
+    #: branch-and-bound expansion cap (safety valve for deep chains)
+    max_search_nodes: int = 20000
 
 
 @dataclasses.dataclass
@@ -462,14 +470,16 @@ def measure_chain_plan(
     max_batches: int = 4,
 ) -> Optional[float]:
     """Verify a chain plan by running the real pipeline driver; seconds
-    per element.  Returns None when the plan is not runnable here (CU
-    count exceeds local devices, planned backends differ from how the
+    per element.  Returns None when the plan is not runnable here (the
+    placement spans more devices than are local -- run_chain would fall
+    back to the single mesh and the measurement would belong to a
+    different configuration -- planned backends differ from how the
     chain was compiled, or the runtime rejects it)."""
     import jax
 
     from ..cfd.simulation import run_chain  # lazy: no cycle
 
-    if plan.cu_count > len(jax.devices()):
+    if plan.placement.devices_used[-1] >= len(jax.devices()):
         return None
     compiled_backends = tuple(s.backend for s in chain.stages)
     if tuple(sp.backend for sp in plan.stages) != compiled_backends:
@@ -482,23 +492,142 @@ def measure_chain_plan(
     return res.wall_s / res.elements if res.elements else None
 
 
+def _search_stage_placements(
+    stage_costs: Sequence[CostBreakdown],
+    space: ChainDesignSpace,
+    topology,
+    batch_elements: int,
+) -> List[Tuple[Tuple[int, ...], Tuple[int, ...]]]:
+    """Branch-and-bound over joint per-stage ``(cu, depth)`` vectors.
+
+    ``stage_costs`` are the per-stage cost terms at ``cu=1`` (from one
+    reference plan); a stage's device terms scale as ``1/cu`` and its
+    contention comes from the topology assignment, so candidate vectors
+    are scored without re-planning.  The frontier prune is *monotone*:
+    extending a partial vector can only raise its max per-stage time,
+    and every final score (back-to-back sum, or contended steady state)
+    is bounded below by that max -- so a partial vector whose optimistic
+    max already matches the k-th best completed score cannot improve the
+    kept set and its whole subtree is cut.  Returns the up-to-
+    ``max_placements`` best ``(cu_counts, prefetch_depths)`` vectors.
+    """
+    from .placement import place_chain
+
+    n = len(stage_costs)
+    # branch on cu only: the proxy score depends on depths solely
+    # through "is any inter-stage ring open", so enumerating per-stage
+    # depth permutations would burn the node budget |depths|-fold on
+    # score-identical siblings.  Depth shapes are attached at the
+    # leaves instead (serial / staging-only / uniform pipelined) and
+    # priced exactly by plan_chain afterwards.
+    opts: List[List[Tuple[float, int]]] = []
+    for c in stage_costs:
+        o: List[Tuple[float, int]] = []
+        for cu in sorted(set(space.cu_counts)):
+            if cu < 1 or cu > topology.n_devices or batch_elements % cu:
+                continue
+            t = max(c.t_host, max(c.t_compute, c.t_hbm) / cu) + c.t_overhead
+            o.append((t, cu))
+        if not o:
+            o = [(
+                max(c.t_host, max(c.t_compute, c.t_hbm)) + c.t_overhead, 1,
+            )]
+        o.sort()
+        opts.append(o)
+
+    def score(cus: Tuple[int, ...], pipelined: bool) -> float:
+        place = place_chain(topology, cus, 1, n_stages=n)
+        cont = place.contention
+        b2b, steady = 0.0, 0.0
+        for i, c in enumerate(stage_costs):
+            dev = max(c.t_compute, c.t_hbm) / place.cu_counts[i]
+            b2b += max(c.t_host, dev) + c.t_overhead
+            steady = max(
+                steady, max(c.t_host, cont[i] * dev) + c.t_overhead
+            )
+        return min(b2b, steady) if pipelined and n > 1 else b2b
+
+    K = max(1, space.max_placements)
+    best: List[Tuple[float, Tuple[int, ...]]] = []
+    visited = 0
+
+    def dfs(i: int, cus: List[int], partial_max: float) -> None:
+        nonlocal visited
+        visited += 1
+        if visited > space.max_search_nodes:
+            return
+        if len(best) >= K and partial_max >= best[-1][0]:
+            return  # monotone prune: no completion can beat the kept set
+        if i == n:
+            vec = tuple(cus)
+            best.append((score(vec, pipelined=True), vec))
+            best.sort(key=lambda x: x[0])
+            del best[K:]
+            return
+        for t, cu in opts[i]:
+            cus.append(cu)
+            dfs(i + 1, cus, max(partial_max, t))
+            cus.pop()
+
+    dfs(0, [], 0.0)
+
+    # canonical depth shapes per kept cu vector: pure serial, staging-
+    # only (host rings deep, stages back-to-back -- a non-uniform
+    # vector), and uniform pipelined at each positive swept depth
+    positive = sorted({d for d in space.prefetch_depths if d > 0})
+    shapes: List[Tuple[Tuple[int, ...], bool]] = []
+    if 0 in space.prefetch_depths:
+        shapes.append(((0,) * n, False))
+    if positive:
+        shapes.append(((max(positive),) + (0,) * (n - 1), False))
+        shapes += [((d,) * n, True) for d in positive]
+    if not shapes:
+        shapes = [((0,) * n, False)]
+    scored = [
+        (score(cus, pipelined), cus, depths)
+        for _, cus in best
+        for depths, pipelined in shapes
+    ]
+    scored.sort(key=lambda x: x[0])
+    # fair truncation across depth shapes: keep the best vectors of
+    # every schedule shape, not K copies of the uniform-pipelined one
+    # -- the proxy cannot price fill/residency, so the exact planner
+    # must see serial and staging-only candidates too
+    buckets = [
+        [s for s in scored if s[2] == depths] for depths, _ in shapes
+    ]
+    kept: List[Tuple[float, Tuple[int, ...], Tuple[int, ...]]] = []
+    while len(kept) < K and any(buckets):
+        for b in buckets:
+            if b and len(kept) < K:
+                kept.append(b.pop(0))
+    kept.sort(key=lambda x: x[0])
+    return [(cus, depths) for _, cus, depths in kept]
+
+
 def explore_chain(
     chain: "chain_mod.ProgramChain",
     *,
     target: Optional[MemoryTarget] = None,
     n_eq: int = 1 << 16,
     space: Optional[ChainDesignSpace] = None,
+    topology=None,
     measure_top: int = 0,
     measure_batches: int = 4,
     calibrate: bool = False,
 ) -> List[ChainCandidate]:
-    """Sweep chain plans: per-stage backend combinations and prefetch
-    depth under one shared (divisor-scaled) E.  Ranked best-first with
-    infeasible plans last, exactly like :func:`explore`.  Depth>0
-    candidates are priced with the cross-batch stage-pipelining overlap
-    term (``ChainCost.t_overlapped``: slowest stage + amortized
-    fill/drain), so the sweep weighs the overlap the executor actually
-    delivers.
+    """Sweep chain plans: per-stage backend combinations and *joint
+    per-stage placements* under one shared (divisor-scaled) E.  Every
+    (policy, backends, E) point contributes the classic chain-wide
+    uniform (cu, depth) grid plus the ``max_placements`` best joint
+    per-stage vectors found by :func:`_search_stage_placements` over
+    ``topology`` (default: just enough devices for the largest swept CU
+    count).  Ranked best-first with infeasible plans last, exactly like
+    :func:`explore`.  Depth>0 candidates are priced with the
+    contention-aware cross-batch overlap term
+    (``ChainCost.t_overlapped``: slowest contended stage + amortized
+    fill/drain), so replication and stage pipelining competing for the
+    same devices is weighed exactly as the executor delivers it.
 
     ``measure_top`` verifies the k best feasible candidates whose
     planned backends match the chain's compiled ones by running the real
@@ -510,6 +639,7 @@ def explore_chain(
     import itertools
 
     from . import chain as chain_mod  # local: chain imports predict_cost
+    from .placement import DeviceTopology
 
     if calibrate and not measure_top:
         raise ValueError(
@@ -518,6 +648,8 @@ def explore_chain(
         )
     target = target if target is not None else detect_target()
     space = space or ChainDesignSpace()
+    if topology is None:
+        topology = DeviceTopology.homogeneous(max(1, max(space.cu_counts)))
     n_stages = len(chain.stages)
 
     combos = list(
@@ -545,23 +677,45 @@ def explore_chain(
         e_cands = sorted({max(1, auto_e // d) for d in space.batch_divisors})
         for backends in combos:
             for e in e_cands:
+                def make_plan_at(cus, depths):
+                    return chain_mod.plan_chain(
+                        chain, target=target, policy=policy,
+                        backends=backends, batch_elements=e,
+                        prefetch_depth=list(depths), cu_count=list(cus),
+                        topology=topology, n_eq=n_eq,
+                        _sched_cache=sched_cache,
+                    )
+
+                # reference plan: per-stage cost terms at cu=1 feed the
+                # placement search (device terms scale as 1/cu)
+                ref = make_plan_at((1,) * n_stages, (1,) * n_stages)
+                vectors = {
+                    ((1,) * n_stages, (1,) * n_stages): ref,
+                }
+                # the classic chain-wide uniform sweep is kept verbatim
                 for depth in space.prefetch_depths:
                     for cu in space.cu_counts:
-                        plan = chain_mod.plan_chain(
-                            chain, target=target, policy=policy,
-                            backends=backends, batch_elements=e,
-                            prefetch_depth=depth, cu_count=cu, n_eq=n_eq,
-                            _sched_cache=sched_cache,
+                        cu = max(1, min(cu, topology.n_devices))
+                        vectors.setdefault(
+                            ((cu,) * n_stages, (depth,) * n_stages), None
                         )
-                        cands.append(
-                            ChainCandidate(
-                                plan=plan,
-                                predicted_s_per_element=(
-                                    plan.cost.t_pipelined
-                                    / plan.batch_elements
-                                ),
-                            )
+                # plus the joint per-stage frontier over the topology
+                for cus, depths in _search_stage_placements(
+                    [sp.cost for sp in ref.stages], space, topology, e
+                ):
+                    vectors.setdefault((cus, depths), None)
+                for (cus, depths), plan in vectors.items():
+                    if plan is None:
+                        plan = make_plan_at(cus, depths)
+                    cands.append(
+                        ChainCandidate(
+                            plan=plan,
+                            predicted_s_per_element=(
+                                plan.cost.t_pipelined
+                                / plan.batch_elements
+                            ),
                         )
+                    )
     cands.sort(
         key=lambda c: (
             not c.plan.feasible,
@@ -665,13 +819,22 @@ def _measure_candidates(
 def format_chain_ranking(
     cands: Sequence[ChainCandidate], limit: int = 10
 ) -> str:
-    """Compact leaderboard for chain sweeps (per-stage backends)."""
+    """Compact leaderboard for chain sweeps (per-stage backends and
+    per-stage (cu, depth) placements)."""
     hdr = (
-        f"{'#':>3} {'backends':<28} {'policy':<10} {'E':>8} {'K':>2} "
+        f"{'#':>3} {'backends':<28} {'policy':<10} {'E':>8} "
+        f"{'K':<8} {'CU':<8} "
         f"{'pred us/elem':>13} {'meas us/elem':>13} "
         f"{'resident MiB':>13} {'feasible':>9}"
     )
     lines = [hdr, "-" * len(hdr)]
+
+    def vec(vals):
+        s = ",".join(str(v) for v in vals)
+        if len(set(vals)) == 1:
+            s = str(vals[0])
+        return s if len(s) <= 8 else s[:5] + "..."
+
     for i, c in enumerate(cands[:limit]):
         p = c.plan
         meas = (
@@ -683,7 +846,8 @@ def format_chain_ranking(
             backends = backends[:25] + "..."
         lines.append(
             f"{i:>3} {backends:<28} {p.policy:<10} {p.batch_elements:>8} "
-            f"{max(sp.prefetch_depth for sp in p.stages):>2} "
+            f"{vec([sp.prefetch_depth for sp in p.stages]):<8} "
+            f"{vec(list(p.cu_counts)):<8} "
             f"{c.predicted_s_per_element * 1e6:>13.4f} "
             f"{meas} {p.resident_bytes / 2**20:>13.1f} "
             f"{'yes' if p.feasible else 'no':>9}"

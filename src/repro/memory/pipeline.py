@@ -22,12 +22,17 @@ staging that also rides out host-side jitter.
 :func:`run_stage_pipelined` generalizes it to a whole chain with one
 dispatch ring per stage (per-stage depths), handing HBM-resident
 inter-stage values from producer to consumer without host round-trips.
+Its multi-device mode (``place_fns``, built from a
+:class:`~repro.memory.placement.PlacementPlan` via
+:func:`placement_meshes`) runs one dispatch ring per *device group*:
+each stage shards its element batch over its own group's mesh and the
+HBM-resident handoff is resharded between groups as it crosses.
 """
 from __future__ import annotations
 
 from collections import deque
 from typing import (Any, Callable, Dict, Iterable, Iterator, List, Optional,
-                    Sequence, Union)
+                    Sequence, Tuple, Union)
 
 import jax
 
@@ -92,6 +97,31 @@ def run_pipelined(
     return results
 
 
+def placement_meshes(
+    placement, devices: Optional[Sequence[Any]] = None
+) -> Optional[List[Tuple[Any, ...]]]:
+    """Per-stage local device groups for a PlacementPlan.
+
+    Maps each stage's topology device ids onto the local JAX devices
+    (``devices`` defaults to ``jax.devices()``).  Returns None when the
+    placement does not fit the local pool (too few devices) or is the
+    degenerate single-group case -- callers then fall back to today's
+    single-mesh execution, which is bitwise-identical by construction.
+    """
+    if placement is None:
+        return None
+    devices = list(devices) if devices is not None else list(jax.devices())
+    used = placement.devices_used
+    if not used or used[-1] >= len(devices):
+        return None  # placement planned for a bigger machine than this
+    groups = [
+        tuple(devices[d] for d in sp.devices) for sp in placement.stages
+    ]
+    if len({g for g in groups}) == 1 and len(groups[0]) == 1:
+        return None  # every stage on one device: today's path exactly
+    return groups
+
+
 def stage_skews(depths: Sequence[int]) -> List[int]:
     """How many batches each stage lags behind stage 0.
 
@@ -116,6 +146,8 @@ def run_stage_pipelined(
     depths: Union[int, Sequence[int]] = 1,
     reduce_fn: Optional[Callable[[Any], Any]] = None,
     defer_sync: Optional[bool] = None,
+    place_fns: Optional[Sequence[Optional[Callable[[Any, Any],
+                                                   Any]]]] = None,
 ) -> List[Any]:
     """Run every batch through a chain of stages, cross-batch pipelined.
 
@@ -138,11 +170,22 @@ def run_stage_pipelined(
     Every batch still passes through every stage exactly once with
     identical inputs, so results are bitwise-equal to the serial
     schedule -- only the dispatch interleaving changes.
+
+    ``place_fns`` is the multi-device hook: ``place_fns[i](staged,
+    carry)`` runs right before stage i consumes a batch and returns the
+    ``(staged, carry)`` pair moved onto stage i's device group (e.g.
+    ``jax.device_put`` of the HBM-resident handoff onto the consumer's
+    element-sharded mesh).  ``None`` entries (or ``place_fns=None``)
+    leave the record untouched -- the single-device fallback.
     """
     stage_fns = list(stage_fns)
     n_stages = len(stage_fns)
     if n_stages == 0:
         raise ValueError("need at least one stage")
+    if place_fns is not None and len(place_fns) != n_stages:
+        raise ValueError(
+            f"need {n_stages} place fns, got {len(place_fns)}"
+        )
     if isinstance(depths, int):
         depths = [depths] * n_stages
     else:
@@ -188,6 +231,8 @@ def run_stage_pipelined(
             if k < 0 or (n is not None and k >= n):
                 continue  # pipeline fill (k<0) or drain (k>=n)
             rec = records[k]
+            if place_fns is not None and place_fns[i] is not None:
+                rec[0], rec[1] = place_fns[i](rec[0], rec[1])
             rec[1] = fn(rec[0], rec[1])
         k = t - max_skew
         if k >= 0 and (n is None or k < n):

@@ -1,0 +1,225 @@
+"""Placement: co-scheduling CU replication and stage pipelining over an
+explicit device topology.
+
+The paper's generator allocates HBM pseudo-channels and compute units
+*jointly*: replicated CUs and the streaming pipeline contend for the
+same physical resources, and the tool flow prices that contention before
+any hardware is generated.  This module is the execution-substrate half
+of that decision for the JAX port:
+
+  * :class:`DeviceTopology` -- the machine the chain will actually run
+    on (local JAX devices, or a hypothetical machine for planning),
+  * :class:`StagePlacement` -- one stage's resource grant: how many CUs
+    (mesh devices) it shards elements over, how deep its dispatch ring
+    runs, and *which* devices it owns,
+  * :class:`PlacementPlan` -- the per-stage vector plus the stage ->
+    device-group assignment, with the structural quantity the cost model
+    prices: **contention**, the number of pipeline stages whose device
+    groups overlap a given stage's group.  Under cross-batch stage
+    pipelining every stage is live on a different batch simultaneously,
+    so stages sharing a device time-slice it -- replication and overlap
+    compete for the same devices (ROADMAP, PR-4 next steps).
+
+Placement is pure data (frozen dataclasses), deterministic, and cheap:
+``plan_chain`` derives one per plan, ``dse.explore_chain`` searches the
+joint per-stage ``(cu_count, prefetch_depth)`` space over a fixed
+topology, and ``cfd.simulation.run_chain`` executes the winning plan
+(one dispatch ring per device group, element-sharded intra-stage,
+HBM-resident handoffs resharded between groups).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple, Union
+
+
+class PlacementError(ValueError):
+    """Raised on malformed placements (bad groups, topology mismatch)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceTopology:
+    """The devices a chain executes on, grouped into CU groups.
+
+    ``n_devices`` counts interchangeable accelerator devices (JAX local
+    devices here; CU sites on the paper's FPGA).  A hypothetical
+    topology (for planning a machine you are not on) is just a different
+    ``n_devices`` -- placement and pricing never touch the runtime.
+    """
+
+    n_devices: int
+    device_kind: str = "generic"
+
+    def __post_init__(self):
+        if self.n_devices < 1:
+            raise PlacementError(
+                f"topology needs >= 1 device, got {self.n_devices}"
+            )
+
+    @classmethod
+    def detect(cls) -> "DeviceTopology":
+        """The local JAX device pool (import deferred: planning stays
+        importable without a runtime)."""
+        import jax
+
+        devs = jax.devices()
+        return cls(n_devices=len(devs), device_kind=devs[0].platform)
+
+    @classmethod
+    def homogeneous(cls, n_devices: int,
+                    device_kind: str = "generic") -> "DeviceTopology":
+        return cls(n_devices=n_devices, device_kind=device_kind)
+
+
+@dataclasses.dataclass(frozen=True)
+class StagePlacement:
+    """One stage's resource grant on the topology."""
+
+    cu_count: int               # devices the stage shards elements over
+    prefetch_depth: int         # dispatch-ring depth (stage 0: host K)
+    devices: Tuple[int, ...]    # topology device ids the stage owns
+
+    def __post_init__(self):
+        if self.cu_count < 1:
+            raise PlacementError(f"cu_count must be >= 1, got {self.cu_count}")
+        if self.prefetch_depth < 0:
+            raise PlacementError(
+                f"prefetch_depth must be >= 0, got {self.prefetch_depth}"
+            )
+        if len(self.devices) != self.cu_count:
+            raise PlacementError(
+                f"stage owns {len(self.devices)} devices but cu_count="
+                f"{self.cu_count}"
+            )
+        if len(set(self.devices)) != len(self.devices):
+            raise PlacementError(f"duplicate devices in group {self.devices}")
+
+
+@dataclasses.dataclass(frozen=True)
+class PlacementPlan:
+    """Per-stage ``(cu_count, prefetch_depth)`` vector plus the stage ->
+    device-group assignment over one topology."""
+
+    topology: DeviceTopology
+    stages: Tuple[StagePlacement, ...]
+
+    def __post_init__(self):
+        if not self.stages:
+            raise PlacementError("placement needs >= 1 stage")
+        for i, sp in enumerate(self.stages):
+            bad = [d for d in sp.devices if not 0 <= d < self.topology.n_devices]
+            if bad:
+                raise PlacementError(
+                    f"stage {i} placed on devices {bad} outside the "
+                    f"{self.topology.n_devices}-device topology"
+                )
+
+    # -- vector views --------------------------------------------------------
+    @property
+    def n_stages(self) -> int:
+        return len(self.stages)
+
+    @property
+    def cu_counts(self) -> Tuple[int, ...]:
+        return tuple(sp.cu_count for sp in self.stages)
+
+    @property
+    def prefetch_depths(self) -> Tuple[int, ...]:
+        return tuple(sp.prefetch_depth for sp in self.stages)
+
+    @property
+    def max_cu_count(self) -> int:
+        return max(self.cu_counts)
+
+    @property
+    def device_groups(self) -> Tuple[Tuple[int, ...], ...]:
+        return tuple(sp.devices for sp in self.stages)
+
+    @property
+    def devices_used(self) -> Tuple[int, ...]:
+        used = sorted({d for sp in self.stages for d in sp.devices})
+        return tuple(used)
+
+    # -- the quantity the cost model prices ---------------------------------
+    @property
+    def contention(self) -> Tuple[int, ...]:
+        """Per stage: how many stages (itself included) own at least one
+        of its devices.  Under stage pipelining every stage is live
+        simultaneously, so overlapping groups time-slice their shared
+        devices; disjoint groups (contention 1) pipeline freely."""
+        sets = [set(sp.devices) for sp in self.stages]
+        return tuple(
+            sum(1 for other in sets if mine & other) for mine in sets
+        )
+
+    def disjoint(self) -> bool:
+        return all(c == 1 for c in self.contention)
+
+    # -- report --------------------------------------------------------------
+    def describe(self) -> List[str]:
+        """The golden-checked ``placement:`` report lines."""
+        groups = " | ".join(
+            ",".join(str(d) for d in sp.devices) for sp in self.stages
+        )
+        return [
+            f"  placement: {self.topology.n_devices} device(s)   "
+            f"per-stage cu [{','.join(str(c) for c in self.cu_counts)}]   "
+            f"contention [{','.join(str(c) for c in self.contention)}]",
+            f"    stage device groups [{groups}]",
+        ]
+
+
+def assign_device_groups(
+    topology: DeviceTopology, cu_counts: Sequence[int]
+) -> List[Tuple[int, ...]]:
+    """Deterministic stage -> device-group assignment: contiguous blocks
+    laid out round-robin over the topology.  When the stages' combined
+    CU demand fits the device pool the groups come out disjoint
+    (contention 1 everywhere); otherwise they wrap and overlap, and the
+    resulting contention is exactly what :class:`ChainCost` prices."""
+    n = topology.n_devices
+    groups: List[Tuple[int, ...]] = []
+    offset = 0
+    for g in cu_counts:
+        g = max(1, min(int(g), n))
+        groups.append(tuple((offset + k) % n for k in range(g)))
+        offset = (offset + g) % n
+    return groups
+
+
+def place_chain(
+    topology: DeviceTopology,
+    cu_counts: Union[int, Sequence[int]],
+    prefetch_depths: Union[int, Sequence[int]],
+    *,
+    n_stages: Optional[int] = None,
+) -> PlacementPlan:
+    """Build the PlacementPlan for per-stage CU counts and ring depths.
+
+    Scalars broadcast chain-wide (``n_stages`` then sizes the vector);
+    CU counts are clamped to the topology -- the topology *bounds*
+    replication, which is the point of making it explicit."""
+    if isinstance(cu_counts, int):
+        if n_stages is None:
+            raise PlacementError("scalar cu_counts needs n_stages")
+        cu_counts = [cu_counts] * n_stages
+    else:
+        cu_counts = list(cu_counts)
+    if isinstance(prefetch_depths, int):
+        prefetch_depths = [prefetch_depths] * len(cu_counts)
+    else:
+        prefetch_depths = list(prefetch_depths)
+    if len(prefetch_depths) != len(cu_counts):
+        raise PlacementError(
+            f"{len(cu_counts)} cu counts vs {len(prefetch_depths)} depths"
+        )
+    groups = assign_device_groups(topology, cu_counts)
+    return PlacementPlan(
+        topology=topology,
+        stages=tuple(
+            StagePlacement(
+                cu_count=len(g), prefetch_depth=max(0, int(d)), devices=g
+            )
+            for g, d in zip(groups, prefetch_depths)
+        ),
+    )

@@ -229,8 +229,17 @@ def test_explore_chain_ranked_and_pareto():
     cands = dse.explore_chain(
         chain, target=channels.ALVEO_U280, n_eq=1 << 14, space=space
     )
-    # 8 backend combos x 2 E x 2 K
-    assert len(cands) == 32
+    # every (backends, E) point contributes at least the chain-wide
+    # uniform (cu, depth) grid (8 combos x 2 E x 2 K) plus the joint
+    # per-stage placement frontier, deduplicated
+    assert len(cands) >= 32
+    assert len(
+        {(tuple(sp.backend for sp in c.plan.stages),
+          c.plan.batch_elements,
+          tuple(sp.prefetch_depth for sp in c.plan.stages),
+          c.plan.cu_counts)
+         for c in cands}
+    ) == len(cands)
     feas = [c for c in cands if c.plan.feasible]
     assert feas
     pred = [c.predicted_s_per_element for c in feas]
@@ -242,6 +251,12 @@ def test_explore_chain_ranked_and_pareto():
     # per-stage backends really vary across the sweep
     combos = {tuple(sp.backend for sp in c.plan.stages) for c in cands}
     assert len(combos) == 8
+    # ... and so do the per-stage depth vectors (the joint search emits
+    # non-uniform placements, not just the chain-wide sweep)
+    depth_vecs = {
+        tuple(sp.prefetch_depth for sp in c.plan.stages) for c in cands
+    }
+    assert any(len(set(v)) > 1 for v in depth_vecs)
 
 
 def test_chain_cost_overlap_term():
@@ -260,11 +275,28 @@ def test_chain_cost_overlap_term():
         prefetch_depth=(1, 0, 0), n_eq=1 << 12,
     )
     assert piped.cost.pipelined_stages and not flat.cost.pipelined_stages
-    assert piped.cost.t_steady == max(
-        c.t_pipelined for c in piped.cost.stages
+    # the steady state is the slowest *contended* stage: on the default
+    # single-device topology all three stages time-slice one device
+    assert piped.cost.contention == (3, 3, 3)
+    assert piped.cost.t_steady == max(piped.cost.stage_steady_times)
+    assert piped.cost.t_steady >= max(
+        max(c.t_host, c.t_compute, c.t_hbm) + c.t_overhead
+        for c in piped.cost.stages
     )
+    # a disjoint placement (one device per stage) removes the contention
+    # and can only speed the steady state up
+    from repro.memory.placement import DeviceTopology
+
+    disjoint = mchain.plan_chain(
+        chain, target=channels.ALVEO_U280, batch_elements=256,
+        prefetch_depth=1, n_eq=1 << 12,
+        topology=DeviceTopology.homogeneous(3),
+    )
+    assert disjoint.placement.contention == (1, 1, 1)
+    assert disjoint.cost.t_steady <= piped.cost.t_steady * (1 + 1e-12)
     assert piped.cost.t_pipelined == pytest.approx(
-        piped.cost.t_steady + piped.cost.t_fill
+        min(piped.cost.t_back_to_back,
+            piped.cost.t_steady + piped.cost.t_fill)
     )
     assert piped.cost.t_pipelined <= flat.cost.t_pipelined * (1 + 1e-12)
     assert piped.cost.stage_overlap_speedup >= 1.0 - 1e-12

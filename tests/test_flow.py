@@ -165,6 +165,46 @@ def test_flow_output_consumed_downstream_reaches_host(rng):
     )
 
 
+def test_flow_shared_precompute_consumed_by_two_stages(rng):
+    """Regression (PR-4 review gap a): a shared precomputed operand
+    (element-free q = M * M) consumed by two auto-derived stages used to
+    make flow.compile reject the program ('does not depend on any
+    element input'); the partitioner now duplicates the element-free
+    nodes into every consumer stage."""
+    src = (
+        "var input M : [4 4]\n"
+        "var input elem x : [4 4]\n"
+        "var input elem y : [4 4]\n"
+        "var output elem u : [4 4]\n"
+        "var output elem v : [4 4]\n"
+        "var q : [4 4]\n"
+        "q = M * M\n"
+        "u = q # x . [[1 2]]\n"
+        "v = q * y\n"
+    )
+    system = flow.compile(
+        src, target=channels.CPU_HOST, batch_elements=4, n_eq=8
+    )
+    assert len(system.chain.stages) == 2
+    # both stages recompute q from the shared M; nothing element-free
+    # crosses a stage boundary
+    for s in system.chain.stages:
+        assert "M" in s.program.inputs
+    assert all(s.klass != liveness.STREAM_RESIDENT or s.name != "q"
+               for s in system.streams)
+    M = rng.uniform(-1, 1, (4, 4)).astype(np.float32)
+    x = rng.uniform(-1, 1, (8, 4, 4)).astype(np.float32)
+    y = rng.uniform(-1, 1, (8, 4, 4)).astype(np.float32)
+    res = _chain_run(system, {"x": x, "y": y}, {"M": M})
+    q = M * M
+    (uq,) = [k for k in res.outputs if k.endswith(".u")]
+    (vq,) = [k for k in res.outputs if k.endswith(".v")]
+    np.testing.assert_allclose(
+        res.outputs[uq], np.einsum("ab,ebc->eac", q, x), atol=1e-5
+    )
+    np.testing.assert_allclose(res.outputs[vq], q[None] * y, atol=1e-5)
+
+
 def test_flow_rejects_degenerate_programs():
     with pytest.raises(dsl.ParseError, match="empty program"):
         flow.compile("// comment only\n")
@@ -223,6 +263,43 @@ def test_flow_dse_adopts_feasible_plan():
     assert tuple(s.backend for s in system.chain.stages) == tuple(
         sp.backend for sp in system.plan.stages
     )
+
+
+def test_flow_dse_recompiles_pallas_block_on_e_change(monkeypatch):
+    """Regression (PR-4 review gap b): a DSE winner with the *same*
+    backends+policy but a different E/block used to skip the recompile,
+    leaving the Pallas kernel's baked block out of sync with the plan's
+    block_elements.  The winner's block must reach the kernel."""
+    from repro.kernels.helmholtz import ops as hops
+
+    seen = []
+    real = hops.make_pallas_impl
+
+    def spy(impl="auto", block_elements=hops.DEFAULT_BLOCK_ELEMENTS):
+        seen.append(block_elements)
+        return real(impl=impl, block_elements=block_elements)
+
+    monkeypatch.setattr(
+        "repro.flow.patterns.helmholtz_ops.make_pallas_impl", spy
+    )
+    system = flow.compile(
+        dsl.INVERSE_HELMHOLTZ_SRC.format(p=5),
+        element_vars=("u", "D", "v"), backend="pallas", max_stages=1,
+        target=channels.ALVEO_U280, n_eq=1 << 12, dse=True,
+        dse_space=dse.ChainDesignSpace(
+            backends=("pallas",), batch_divisors=(2,),
+            prefetch_depths=(1,), max_backend_combos=1,
+        ),
+    )
+    assert system.backends == ("pallas",)
+    blk = system.plan.stages[0].block_elements
+    assert blk > 0
+    # first call: the pre-DSE compile at the kernel default; second: the
+    # adoption recompile threading the winning plan's VMEM block
+    assert len(seen) == 2
+    assert seen[0] == hops.DEFAULT_BLOCK_ELEMENTS
+    assert seen[-1] == blk
+    assert system.plan.batch_elements % blk == 0
 
 
 def test_flow_dse_replans_when_winner_backend_unrealizable():

@@ -81,3 +81,20 @@ def test_golden_chain_mixed_backends():
         prefetch_depth=(1, 1, 2), n_eq=1 << 12,
     )
     _check("chain_cfd_p5_mixed_alveo.txt", plan.report())
+
+
+def test_golden_chain_sharded_placement():
+    """Locks the placement layer's report: per-stage CU groups over an
+    explicit topology, the contention vector, and the contention-aware
+    overlap pricing (stage groups wrap on a 2-device topology, so the
+    middle stage time-slices with both neighbors)."""
+    from repro.memory.placement import DeviceTopology
+
+    chain = operators.build_cfd_chain(5)
+    plan = mchain.plan_chain(
+        chain, target=channels.ALVEO_U280, policy="float32",
+        batch_elements=256, prefetch_depth=(2, 1, 1),
+        cu_count=(1, 2, 1), topology=DeviceTopology.homogeneous(2),
+        n_eq=1 << 12,
+    )
+    _check("chain_cfd_p5_sharded_alveo.txt", plan.report())

@@ -104,3 +104,37 @@ def test_stream_bytes_default_follows_policy_width():
         for k in bf16.stream_bytes()
     )
     assert bf16.summary() != f32.summary()
+
+
+def test_stage_partition_duplicates_element_free_group_into_all_consumers():
+    """Regression (PR-4 review gap a): an element-free group consumed by
+    two element-dependent stages is duplicated into *both*, so no stage
+    reads an element-free cross-stage stream."""
+    src = (
+        "var input M : [4 4]\n"
+        "var input elem x : [4 4]\n"
+        "var input elem y : [4 4]\n"
+        "var output elem u : [4 4]\n"
+        "var output elem v : [4 4]\n"
+        "var q : [4 4]\n"
+        "q = M * M\n"
+        "u = q # x . [[1 2]]\n"
+        "v = q * y\n"
+    )
+    prog = rewrite.optimize(dsl.parse(src))
+    sch = schedule.schedule(prog, bytes_per_scalar=4)
+    parts = schedule.stage_partition(sch)
+    elem_dep = prog.element_dependent_uids()
+    q_uid = prog.temps["q"].uid
+    assert q_uid not in elem_dep
+    holders = [
+        i for i, nodes in enumerate(parts)
+        if any(n.uid == q_uid for n in nodes)
+    ]
+    assert len(holders) == 2  # one copy per consumer stage
+    # every stage still streams elements, and no stage's boundary input
+    # is an element-free value produced by another stage
+    classes = liveness.classify_boundary_streams(prog, parts)
+    assert q_uid not in classes
+    for nodes in parts:
+        assert any(n.uid in elem_dep for n in nodes)

@@ -20,6 +20,12 @@ Checks, in order of strength:
     env-tunable (``BENCH_REGRESSION_THRESHOLD``, default 1.0 = allow up
     to 2x) because CI wall clocks drift wildly; ratios above do the
     precise policing.
+  * **prediction error** (model health): rows carrying a
+    ``prediction_error`` field (``max(pred/meas, meas/pred)`` from the
+    planner's cost model vs the measured run) must stay under
+    ``BENCH_PRED_ERROR_MAX`` (default 25 -- generous, since shared CI
+    runners stall by an order of magnitude; tighten locally to audit
+    the cost model).
   * **row coverage**: every baseline row must still exist (a silently
     dropped rung is a regression in what we measure).
 
@@ -47,7 +53,8 @@ def _rows_by_name(doc: dict) -> dict:
 
 
 def compare(
-    baseline: dict, current: dict, *, threshold: float
+    baseline: dict, current: dict, *, threshold: float,
+    pred_error_max: float = 25.0,
 ) -> Tuple[List[str], List[Tuple[str, float, float, str]]]:
     """Returns (failures, table rows).  Table rows are
     (name, baseline_us, current_us, verdict)."""
@@ -84,6 +91,17 @@ def compare(
             failures.append(
                 f"{name}: host_stream_bytes grew {b_bytes} -> {c_bytes} "
                 "(planner residency regression; deterministic, not noise)"
+            )
+        # cost-model health: the planner's prediction must stay within
+        # a (generous) multiplicative band of what actually ran
+        pe = cur.get("prediction_error")
+        if pe is not None and pred_error_max > 0 and pe > pred_error_max:
+            failures.append(
+                f"{name}: prediction_error {pe:.1f}x exceeds "
+                f"BENCH_PRED_ERROR_MAX={pred_error_max:g} (cost model "
+                f"predicted {cur.get('predicted_s_per_element', 0) * 1e6:.3f} "
+                f"us/elem, measured "
+                f"{cur.get('measured_s_per_element', 0) * 1e6:.3f} us/elem)"
             )
     for name in cur_rows.keys() - base_rows.keys():
         table.append((name, float("nan"), cur_rows[name]["us_per_batch"],
@@ -172,7 +190,11 @@ def main(argv: Optional[List[str]] = None) -> int:
         print(f"error: {e}", file=sys.stderr)
         return 2
     threshold = float(os.environ.get("BENCH_REGRESSION_THRESHOLD", "1.0"))
-    failures, table = compare(baseline, current, threshold=threshold)
+    pred_error_max = float(os.environ.get("BENCH_PRED_ERROR_MAX", "25"))
+    failures, table = compare(
+        baseline, current, threshold=threshold,
+        pred_error_max=pred_error_max,
+    )
 
     name = os.path.basename(baseline_path)
     md = render_markdown(name, table, failures, current)

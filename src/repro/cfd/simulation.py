@@ -139,6 +139,7 @@ def run_simulation(
     max_batches: Optional[int] = None,
     S: Optional[np.ndarray] = None,
     plan: Optional[MemoryPlan] = None,
+    tracer=None,
 ) -> SimResult:
     """Run the batched Inverse-Helmholtz simulation under a MemoryPlan.
 
@@ -146,6 +147,10 @@ def run_simulation(
     explicitly (e.g. a DSE winner) or let ``plan_config`` derive it.
     Returns wall time and a checksum; GFLOPS is derived with the paper's
     op-count model by the caller (benchmarks/).
+
+    ``tracer`` (``repro.trace.Tracer``; None = off) records the staging/
+    dispatch/sync spans of the K-deep engine plus per-channel host byte
+    counters from the plan's buffer table.
     """
     mesh = mesh or element_mesh()
     if plan is None:
@@ -177,6 +182,20 @@ def run_simulation(
             k: jax.device_put(v, elem_sharding) for k, v in batch.items()
         }
 
+    if tracer:
+        from ..trace.attribution import (COUNTER_CHANNEL_BYTES,
+                                         host_channel_bytes)
+
+        ch_bytes = {
+            str(c): float(b)
+            for c, b in host_channel_bytes(plan.buffers).items()
+        }
+        inner_stage = stage
+
+        def stage(batch):
+            tracer.bump(COUNTER_CHANNEL_BYTES, ch_bytes)
+            return inner_stage(batch)
+
     def compute(staged):
         return compiled.batched_fn({"S": S_dev, **staged})
 
@@ -187,6 +206,8 @@ def run_simulation(
         stage_fn=stage,
         depth=depth,
         reduce_fn=lambda out: jnp.sum(out["v"]),
+        tracer=tracer,
+        stage_name=plan.operator,
     )
     wall = time.perf_counter() - t0
     checksum = 0.0
@@ -225,6 +246,9 @@ class ChainResult:
     #: per-stage local device groups the run actually executed on (None
     #: when the placement degenerated to the single global mesh)
     placement_groups: Optional[Tuple[Tuple[int, ...], ...]] = None
+    #: batch indices the StepMonitor flagged as stragglers (empty when no
+    #: monitor was passed or nothing was flagged)
+    straggler_batches: Tuple[int, ...] = ()
 
 
 def _chain_batch_inputs(
@@ -272,6 +296,8 @@ def run_chain(
     shared: Optional[Dict[str, np.ndarray]] = None,
     collect_outputs: bool = False,
     pipeline_stages: Optional[bool] = None,
+    tracer=None,
+    monitor=None,
 ) -> ChainResult:
     """Execute a whole multi-operator pipeline off one ChainPlan.
 
@@ -296,6 +322,14 @@ def run_chain(
     checksum per output crosses back (the plan's host-out streams are
     still priced -- the reduction is a measurement convenience, as in
     ``run_simulation``).
+
+    ``tracer`` (``repro.trace.Tracer``; None = off) records the full
+    span hierarchy -- chain run -> per-stage slot -> dispatch/handoff --
+    plus per-channel host byte, pad-element and CU-occupancy counters
+    from the plan, ready for ``repro.trace.attribution``.  ``monitor``
+    (a ``runtime.StepMonitor``) watches per-batch retire times; flagged
+    batches are annotated on their sync spans and reported in
+    ``ChainResult.straggler_batches``.  Neither changes results.
     """
     mesh = mesh or element_mesh()
     if n_eq is None and inputs:
@@ -433,6 +467,33 @@ def run_chain(
             for k, v in batch.items()
         }
 
+    if tracer:
+        from ..trace.attribution import (COUNTER_CHANNEL_BYTES,
+                                         COUNTER_OCCUPANCY,
+                                         COUNTER_PAD_ELEMENTS,
+                                         host_channel_bytes)
+
+        tracer.meta.update({
+            "chain": plan.chain, "target": plan.target.name,
+            "policy": plan.policy, "signature": plan.signature,
+            "batch_elements": E,
+        })
+        tracer.bump(COUNTER_OCCUPANCY, {
+            sp.name: float(sp.cu_count) for sp in plan.stages
+        })
+        ch_bytes = {
+            str(c): float(b)
+            for c, b in host_channel_bytes(plan.buffers).items()
+        }
+        pad = plan.batch_pad_elements
+        inner_stage_batch = stage_batch
+
+        def stage_batch(batch):
+            tracer.bump(COUNTER_CHANNEL_BYTES, ch_bytes)
+            if pad:
+                tracer.bump(COUNTER_PAD_ELEMENTS, {"pad": float(pad)})
+            return inner_stage_batch(batch)
+
     def make_stage_fn(i: int, s: memchain.ChainStage):
         def run_stage(staged, carry):
             live: Dict[str, jax.Array] = dict(carry) if carry else {}
@@ -491,6 +552,12 @@ def run_chain(
             q: jnp.sum(live[q]) for q in out_names
         }
 
+    m_count0 = monitor.count if monitor is not None else 0
+    m_flags0 = len(monitor.flags) if monitor is not None else 0
+    root = (tracer.begin("run_chain", "run", 0, chain=plan.chain,
+                         batches=n, batch_elements=E,
+                         pipelined=bool(pipeline_stages))
+            if tracer else None)
     t0 = time.perf_counter()
     per_batch = mempipe.run_stage_pipelined(
         stage_fns,
@@ -499,8 +566,20 @@ def run_chain(
         depths=depths,
         reduce_fn=reduce_fn,
         place_fns=place_fns,
+        tracer=tracer,
+        monitor=monitor,
+        stage_names=[s.name for s in chain.stages],
     )
     wall = time.perf_counter() - t0
+    if root is not None:
+        tracer.end(root)
+    stragglers: Tuple[int, ...] = ()
+    if monitor is not None:
+        # monitor counts are 1-based record() calls; one call per retired
+        # batch in batch order, on top of whatever the monitor saw before
+        stragglers = tuple(
+            c - 1 - m_count0 for c in monitor.flags[m_flags0:]
+        )
 
     checksums: Dict[str, float] = {q: 0.0 for q in out_names}
     outputs: Optional[Dict[str, np.ndarray]] = None
@@ -522,4 +601,5 @@ def run_chain(
             tuple(tuple(sp.devices) for sp in place.stages)
             if groups is not None else None
         ),
+        straggler_batches=stragglers,
     )

@@ -364,13 +364,20 @@ class CompiledSystem:
         plan's ``pipeline`` spec decides whether stages are cross-batch
         pipelined (one dispatch ring per stage) or run back-to-back
         (pass ``pipeline_stages=False`` to force the serial baseline;
-        see ``repro.cfd.simulation.run_chain`` for all arguments)."""
+        see ``repro.cfd.simulation.run_chain`` for all arguments).
+        ``tracer=repro.trace.Tracer()`` records the run's span/counter
+        trace; ``monitor=runtime.StepMonitor()`` watches for straggler
+        batches -- both pass straight through to ``run_chain``."""
         from ..cfd.simulation import run_chain  # lazy: cfd builds on flow
 
         return run_chain(self.chain, self.plan, **kwargs)
 
-    def report(self) -> str:
-        """The generated-architecture description (golden-checked)."""
+    def report(self, tracer=None) -> str:
+        """The generated-architecture description (golden-checked).
+
+        Pass the tracer of a completed ``run(tracer=...)`` to append the
+        ``measured:`` section -- the per-stage predicted-vs-measured
+        attribution table (``repro.trace.attribution_report``)."""
         prog = self.program
         elem = set(prog.element_vars)
         n_elem_in = sum(1 for n in prog.inputs if n in elem)
@@ -415,6 +422,10 @@ class CompiledSystem:
                 f"{s.bytes_per_element:>8}  {route}"
             )
         lines += ["", self.plan.report()]
+        if tracer:
+            from ..trace.attribution import attribution_report
+
+            lines += ["", attribution_report(tracer, self.plan)]
         return "\n".join(lines)
 
 

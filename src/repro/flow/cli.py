@@ -62,6 +62,15 @@ def _parse_args(argv: Optional[Sequence[str]]) -> argparse.Namespace:
                     help="force the back-to-back stage schedule for "
                     "--run (the paper's baseline; default: the plan's "
                     "pipeline mode)")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="trace the executed run and write Chrome-trace "
+                    "JSON viewable in Perfetto (implies --run); also "
+                    "prints the measured: pred-vs-measured attribution")
+    ap.add_argument("--profile", default=None, nargs="?", const="",
+                    metavar="PATH",
+                    help="with --trace: record the traced run into the "
+                    "persistent profile store (default path, or "
+                    "$REPRO_PROFILE, when PATH is omitted)")
     return ap.parse_args(argv)
 
 
@@ -124,10 +133,16 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         print()
         print("dse ranking (top 10):")
         print(format_chain_ranking(system.candidates, limit=10))
-    if args.run:
+    if args.run or args.trace:
+        tracer = None
+        if args.trace:
+            from .. import trace as trace_mod
+
+            tracer = trace_mod.Tracer()
         res = system.run(
             max_batches=args.max_batches,
             pipeline_stages=False if args.serial_stages else None,
+            tracer=tracer,
         )
         print()
         print(
@@ -138,4 +153,22 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         )
         for q, v in sorted(res.checksums.items()):
             print(f"  checksum {q} = {v:.6g}")
+        if tracer is not None:
+            trace_mod.write_chrome(
+                tracer, args.trace, metadata={"source": prog_name}
+            )
+            print()
+            print(
+                f"trace written to {args.trace} "
+                "(load in Perfetto / chrome://tracing)"
+            )
+            print()
+            print(trace_mod.attribution_report(tracer, system.plan))
+            if args.profile is not None:
+                store = trace_mod.ProfileStore(path=args.profile or None)
+                got = store.record_trace(tracer, system.plan)
+                print()
+                print(
+                    f"profile: recorded {got} samples -> {store.path}"
+                )
     return 0

@@ -497,6 +497,21 @@ class ChainPlan:
     def batches_for(self, n_eq: int) -> int:
         return max(1, n_eq // self.batch_elements)
 
+    @property
+    def signature(self) -> str:
+        """Stable short id of *what would execute*: stage names/backends/
+        flops, per-stage (K, CU), policy and E -- the profile-store key
+        that groups measured runs of equivalent plans across processes."""
+        import hashlib
+
+        parts = [self.chain, self.policy, str(self.batch_elements)]
+        parts += [
+            f"{sp.name}:{sp.backend}:{sp.flops_per_element}:"
+            f"{sp.prefetch_depth}:{sp.cu_count}"
+            for sp in self.stages
+        ]
+        return hashlib.sha1("|".join(parts).encode()).hexdigest()[:12]
+
     def report(self) -> str:
         t = self.target
         mib = 2 ** 20

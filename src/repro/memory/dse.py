@@ -615,6 +615,7 @@ def explore_chain(
     measure_top: int = 0,
     measure_batches: int = 4,
     calibrate: bool = False,
+    profile=None,
 ) -> List[ChainCandidate]:
     """Sweep chain plans: per-stage backend combinations and *joint
     per-stage placements* under one shared (divisor-scaled) E.  Every
@@ -635,7 +636,16 @@ def explore_chain(
     ``calibrate`` additionally fits the per-term :class:`CostCorrection`
     from those measured runs (each ratio attributed to the bottleneck
     stage's dominating term) and re-ranks every candidate by its
-    corrected prediction."""
+    corrected prediction.
+
+    ``profile`` warm-starts the ranking from the persistent per-machine
+    profile store (``repro.trace.ProfileStore``): pass a store, a path,
+    or ``True`` for the default location.  Candidates are re-ranked by
+    corrected predictions refit from this machine's recorded samples
+    *before* any measurement (so ``measure_top`` verifies the profile-
+    guided leaders), and every run measured here is recorded back into
+    the store.  ``calibrate``'s freshly-fit correction still wins last
+    when both are given."""
     import itertools
 
     from . import chain as chain_mod  # local: chain imports predict_cost
@@ -723,6 +733,15 @@ def explore_chain(
             c.plan.resident_bytes,
         )
     )
+    store = None
+    if profile is not None:
+        from ..trace.profile import ProfileStore  # lazy: no import cycle
+
+        store = ProfileStore.open(profile)
+    if store is not None:
+        corr = store.correction(target.name)
+        if corr.n_samples:
+            apply_correction(cands, corr)
     if measure_top:
         measured = 0
         for c in cands:
@@ -736,6 +755,14 @@ def explore_chain(
             if got is not None:
                 c.measured_s_per_element = got
                 measured += 1
+        if store is not None and measured:
+            for c in cands:
+                if c.measured_s_per_element is not None:
+                    store.record_measurement(
+                        c.plan, c.predicted_s_per_element,
+                        c.measured_s_per_element, scope="dse", save=False,
+                    )
+            store.save()
         if calibrate:
             apply_correction(cands, fit_correction(cands))
     return cands

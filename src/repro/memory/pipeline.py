@@ -30,11 +30,23 @@ HBM-resident handoff is resharded between groups as it crosses.
 """
 from __future__ import annotations
 
+import time
 from collections import deque
 from typing import (Any, Callable, Dict, Iterable, Iterator, List, Optional,
                     Sequence, Tuple, Union)
 
 import jax
+
+# Span categories (the ``repro.trace.attribution`` vocabulary).  The
+# tracer is duck-typed -- any object with begin/end/span/name_track/bump,
+# falsy when disabled -- so this module never imports ``repro.trace``
+# and the executors stay import-light.
+_CAT_SLOT = "slot"
+_CAT_DISPATCH = "dispatch"
+_CAT_HANDOFF = "handoff"
+_CAT_STAGE_HOST = "stage-host"
+_CAT_SYNC = "sync"
+_HOST_TRACK = 0
 
 
 def prefetch(
@@ -59,6 +71,21 @@ def prefetch(
         yield q.popleft()
 
 
+def _traced_stage_fn(stage_fn: Callable[[Any], Any], tracer) -> Callable:
+    """Wrap the staging fn so each host->device stage gets a host-track
+    span (batch index = call order, which is staging order)."""
+    counter = [0]
+
+    def staged(item: Any) -> Any:
+        j = counter[0]
+        counter[0] += 1
+        with tracer.span(f"stage b{j}", _CAT_STAGE_HOST, _HOST_TRACK,
+                         batch=j):
+            return stage_fn(item)
+
+    return staged
+
+
 def run_pipelined(
     compute_fn: Callable[[Any], Any],
     batches: Iterable[Any],
@@ -67,6 +94,8 @@ def run_pipelined(
     depth: int = 1,
     reduce_fn: Optional[Callable[[Any], Any]] = None,
     defer_sync: Optional[bool] = None,
+    tracer=None,
+    stage_name: str = "compute",
 ) -> List[Any]:
     """Run every batch through ``compute_fn`` with K-deep staging.
 
@@ -77,23 +106,44 @@ def run_pipelined(
     ``defer_sync`` delays each host sync by one batch so compute k+1 is
     enqueued before blocking on k (defaults to on whenever ``depth > 0``;
     forcing it off gives the paper's serial baseline).
+
+    ``tracer`` (a ``repro.trace.Tracer``; None/NULL = off) records one
+    staging span per batch on the host track, one dispatch span per
+    batch on track 1, and one sync span per retire.  Disabled tracing
+    costs one truthiness check per site -- results are identical either
+    way (spans only observe).
     """
     if defer_sync is None:
         defer_sync = depth > 0
+    if tracer:
+        tracer.name_track(_HOST_TRACK, "host")
+        tracer.name_track(1, stage_name)
+        stage_fn = _traced_stage_fn(stage_fn, tracer)
+
+    def sync_get(value: Any, j: int) -> Any:
+        if tracer:
+            with tracer.span(f"sync b{j}", _CAT_SYNC, _HOST_TRACK, batch=j):
+                return jax.device_get(value)
+        return jax.device_get(value)
+
     results: List[Any] = []
-    pending = None
-    for staged in prefetch(batches, stage_fn, depth):
+    pending: Optional[Tuple[Any, int]] = None
+    for j, staged in enumerate(prefetch(batches, stage_fn, depth)):
+        sp = (tracer.begin(f"b{j}", _CAT_DISPATCH, 1, batch=j)
+              if tracer else None)
         out = compute_fn(staged)
         if reduce_fn is not None:
             out = reduce_fn(out)
+        if sp is not None:
+            tracer.end(sp)
         if not defer_sync:
-            results.append(jax.device_get(out))
+            results.append(sync_get(out, j))
             continue
         if pending is not None:
-            results.append(jax.device_get(pending))
-        pending = out
+            results.append(sync_get(*pending))
+        pending = (out, j)
     if pending is not None:
-        results.append(jax.device_get(pending))
+        results.append(sync_get(*pending))
     return results
 
 
@@ -148,6 +198,9 @@ def run_stage_pipelined(
     defer_sync: Optional[bool] = None,
     place_fns: Optional[Sequence[Optional[Callable[[Any, Any],
                                                    Any]]]] = None,
+    tracer=None,
+    monitor=None,
+    stage_names: Optional[Sequence[str]] = None,
 ) -> List[Any]:
     """Run every batch through a chain of stages, cross-batch pipelined.
 
@@ -177,6 +230,16 @@ def run_stage_pipelined(
     ``jax.device_put`` of the HBM-resident handoff onto the consumer's
     element-sharded mesh).  ``None`` entries (or ``place_fns=None``)
     leave the record untouched -- the single-device fallback.
+
+    ``tracer`` (``repro.trace.Tracer``; None/NULL = off) gives each
+    stage its own track: every (stage, batch) dispatch becomes a *slot*
+    span carrying ``stage``/``batch``/``tick`` args, with the reshard
+    handoff and the stage-fn dispatch as nested children; host staging
+    and retire syncs land on the host track.  ``monitor`` (a
+    ``runtime.StepMonitor``) is fed the wall time between consecutive
+    batch retirements; flagged steps annotate the retire's sync span
+    with ``straggler=True``.  Both only observe -- per-batch results are
+    identical with or without them.
     """
     stage_fns = list(stage_fns)
     n_stages = len(stage_fns)
@@ -199,6 +262,16 @@ def run_stage_pipelined(
     skews = stage_skews(depths)
     max_skew = skews[-1]
 
+    names = (list(stage_names) if stage_names
+             else [f"stage{i}" for i in range(n_stages)])
+    if len(names) != n_stages:
+        raise ValueError(f"need {n_stages} stage names, got {len(names)}")
+    if tracer:
+        tracer.name_track(_HOST_TRACK, "host")
+        for i, nm in enumerate(names):
+            tracer.name_track(1 + i, nm)
+        stage_fn = _traced_stage_fn(stage_fn, tracer)
+
     staged_seq = prefetch(batches, stage_fn, depths[0])
     #: batch index -> [staged, carry]; holds a batch from the tick stage
     #: 0 dispatches it until the last stage retires it (the window the
@@ -206,15 +279,30 @@ def run_stage_pipelined(
     records: Dict[int, List[Any]] = {}
     results: List[Any] = []
     pending: deque = deque()
+    last_retire = [time.perf_counter()] if monitor is not None else None
 
-    def retire(carry: Any) -> None:
+    def sync_get(value: Any, k: int) -> Any:
+        sp = (tracer.begin(f"sync b{k}", _CAT_SYNC, _HOST_TRACK, batch=k)
+              if tracer else None)
+        got = jax.device_get(value)
+        if monitor is not None:
+            now = time.perf_counter()
+            flagged = monitor.record(now - last_retire[0])
+            last_retire[0] = now
+            if flagged and sp is not None:
+                sp.args["straggler"] = True
+        if sp is not None:
+            tracer.end(sp)
+        return got
+
+    def retire(carry: Any, k: int) -> None:
         value = reduce_fn(carry) if reduce_fn is not None else carry
         if not defer_sync:
-            results.append(jax.device_get(value))
+            results.append(sync_get(value, k))
             return
-        pending.append(value)
+        pending.append((value, k))
         if len(pending) > 1:
-            results.append(jax.device_get(pending.popleft()))
+            results.append(sync_get(*pending.popleft()))
 
     n: Optional[int] = None  # total batches, known once the source drains
     t = 0                    # tick: stage i processes batch t - skews[i]
@@ -231,13 +319,28 @@ def run_stage_pipelined(
             if k < 0 or (n is not None and k >= n):
                 continue  # pipeline fill (k<0) or drain (k>=n)
             rec = records[k]
+            slot = (tracer.begin(f"b{k}", _CAT_SLOT, 1 + i,
+                                 stage=i, batch=k, tick=t)
+                    if tracer else None)
             if place_fns is not None and place_fns[i] is not None:
-                rec[0], rec[1] = place_fns[i](rec[0], rec[1])
-            rec[1] = fn(rec[0], rec[1])
+                if tracer:
+                    with tracer.span(f"reshard b{k}", _CAT_HANDOFF, 1 + i,
+                                     stage=i, batch=k):
+                        rec[0], rec[1] = place_fns[i](rec[0], rec[1])
+                else:
+                    rec[0], rec[1] = place_fns[i](rec[0], rec[1])
+            if tracer:
+                with tracer.span(names[i], _CAT_DISPATCH, 1 + i,
+                                 stage=i, batch=k):
+                    rec[1] = fn(rec[0], rec[1])
+            else:
+                rec[1] = fn(rec[0], rec[1])
+            if slot is not None:
+                tracer.end(slot)
         k = t - max_skew
         if k >= 0 and (n is None or k < n):
-            retire(records.pop(k)[1])
+            retire(records.pop(k)[1], k)
         t += 1
     while pending:
-        results.append(jax.device_get(pending.popleft()))
+        results.append(sync_get(*pending.popleft()))
     return results

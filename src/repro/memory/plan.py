@@ -154,6 +154,19 @@ class MemoryPlan:
         return channels_used(self.buffers)
 
     @property
+    def signature(self) -> str:
+        """Stable short id of what would execute (operator, backend,
+        policy, E, K, CU) -- the profile-store key for single-op runs."""
+        import hashlib
+
+        parts = [
+            self.operator, self.backend, self.policy,
+            str(self.batch_elements), str(self.prefetch_depth),
+            str(self.cu_count), str(self.flops_per_element),
+        ]
+        return hashlib.sha1("|".join(parts).encode()).hexdigest()[:12]
+
+    @property
     def donation(self) -> Tuple[str, ...]:
         """Input buffers safe to donate to XLA (each staged batch is
         consumed exactly once, so its device buffer can be reused for

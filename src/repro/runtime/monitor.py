@@ -17,6 +17,10 @@ class StepMonitor:
     straggler_factor: float = 3.0
     alpha: float = 0.1            # EWMA weight
     warmup: int = 3               # ignore compile-dominated first steps
+    #: EWMA weight on *flagged* steps: damped so one outlier cannot poison
+    #: the mean, but nonzero so a persistent slowdown eventually moves the
+    #: baseline instead of flagging every step forever.
+    flagged_alpha: float = 0.02
 
     def __post_init__(self) -> None:
         self.ewma: Optional[float] = None
@@ -31,11 +35,10 @@ class StepMonitor:
             self.ewma = dt
             return False
         flagged = dt > self.straggler_factor * self.ewma
+        w = self.flagged_alpha if flagged else self.alpha
+        self.ewma = (1 - w) * self.ewma + w * dt
         if flagged:
             self.flags.append(self.count)
-        else:
-            # don't poison the mean with outliers
-            self.ewma = (1 - self.alpha) * self.ewma + self.alpha * dt
         return flagged
 
 

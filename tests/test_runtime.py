@@ -172,6 +172,30 @@ def test_straggler_detection():
     assert not mon.record(1.0)      # ewma not poisoned
 
 
+def test_flagged_step_still_updates_ewma_damped():
+    """A flagged step moves the EWMA -- at the damped weight, not the
+    normal one -- so one outlier cannot poison the baseline but a
+    persistent slowdown eventually re-baselines."""
+    mon = StepMonitor(straggler_factor=2.0, warmup=0)
+    mon.record(1.0)  # seeds the EWMA
+    before = mon.ewma
+    assert mon.record(10.0)          # flagged...
+    assert mon.ewma > before         # ...but the EWMA still moved
+    # and by the damped weight, not the full alpha
+    expect = (1 - mon.flagged_alpha) * before + mon.flagged_alpha * 10.0
+    assert mon.ewma == pytest.approx(expect)
+    assert mon.ewma < (1 - mon.alpha) * before + mon.alpha * 10.0
+
+
+def test_persistent_slowdown_rebaselines():
+    mon = StepMonitor(straggler_factor=2.0, warmup=0, flagged_alpha=0.3)
+    mon.record(1.0)
+    flags = [mon.record(5.0) for _ in range(30)]
+    assert flags[0]          # the jump is flagged at first...
+    assert not flags[-1]     # ...but not forever: the baseline adapted
+    assert mon.flags         # flag history kept for the trace annotations
+
+
 def test_elastic_remesh_plan():
     assert plan_elastic_remesh(256, model_axis=16) == (16, 16)
     assert plan_elastic_remesh(248, model_axis=16) == (15, 16)

@@ -1,0 +1,368 @@
+"""repro.trace: span/counter tracing, Chrome export, schema invariants,
+pred-vs-measured attribution, and the persistent profile store.
+
+The schema tests pin the executor's tracing contract: spans nest and
+never overlap within a track, per-channel byte counters sum *exactly*
+to the plan's host_stream_bytes, disabling the tracer changes nothing
+bitwise, and the Chrome JSON round-trips ``json.loads``.  The golden
+test locks the deterministic (non-timing) fields of the ``measured:``
+report section.
+"""
+import json
+import os
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro import trace
+from repro.cfd import operators
+from repro.cfd.simulation import run_chain
+from repro.memory import chain as mchain
+from repro.memory import channels, dse
+from repro.runtime.monitor import StepMonitor
+from repro.trace.attribution import (
+    CAT_DISPATCH, CAT_SLOT, CAT_SYNC, COUNTER_CHANNEL_BYTES,
+    COUNTER_OCCUPANCY, host_channel_bytes,
+)
+
+GOLDEN_DIR = pathlib.Path(__file__).parent / "golden"
+
+P, E, N_B = 5, 128, 3
+
+
+def _golden_check(name: str, rendered: str) -> None:
+    path = GOLDEN_DIR / name
+    if os.environ.get("REGEN_GOLDENS"):
+        GOLDEN_DIR.mkdir(exist_ok=True)
+        path.write_text(rendered + "\n")
+        pytest.skip(f"regenerated {name}")
+    assert path.exists(), (
+        f"golden file {name} missing -- run with REGEN_GOLDENS=1"
+    )
+    want = path.read_text().rstrip("\n")
+    assert rendered.rstrip("\n") == want, (
+        f"{name} drifted from the checked-in golden.\n"
+        "If the change is intentional, regenerate with REGEN_GOLDENS=1 "
+        "and review the diff.\n"
+        f"--- golden ---\n{want}\n--- current ---\n{rendered}"
+    )
+
+
+@pytest.fixture(scope="module")
+def cfd_chain():
+    return operators.build_cfd_chain(P)
+
+
+def _chain_data(chain, n, rng):
+    inputs = {
+        "interp.u": rng.uniform(-1, 1, (n, P, P, P)).astype(np.float32),
+        "helmholtz.D": rng.uniform(-1, 1, (n, P, P, P)).astype(np.float32),
+    }
+    shared = {
+        name: rng.uniform(-1, 1, node.shape).astype(np.float32)
+        for name, node in sorted(chain.shared_operands().items())
+    }
+    return inputs, shared
+
+
+@pytest.fixture(scope="module")
+def traced_run(cfd_chain):
+    """One stage-pipelined 3-batch run with tracing on, reused by the
+    schema/attribution/profile tests below."""
+    plan = mchain.plan_chain(
+        cfd_chain, target=channels.ALVEO_U280, batch_elements=E,
+        prefetch_depth=1, n_eq=E * N_B,
+    )
+    rng = np.random.default_rng(3)
+    inputs, shared = _chain_data(cfd_chain, E * N_B, rng)
+    tracer = trace.Tracer()
+    res = run_chain(
+        cfd_chain, plan, inputs=inputs, shared=shared, n_eq=E * N_B,
+        max_batches=N_B, pipeline_stages=True, tracer=tracer,
+    )
+    return plan, tracer, res
+
+
+# ---------------------------------------------------------------------------
+# tracer core
+# ---------------------------------------------------------------------------
+
+
+def test_tracer_spans_nest_lifo():
+    tr = trace.Tracer()
+    outer = tr.begin("outer", "run", 0)
+    inner = tr.begin("inner", "slot", 0)
+    tr.end(inner)
+    tr.end(outer)
+    assert not outer.open and not inner.open
+    assert inner.t0 >= outer.t0 and inner.t1 <= outer.t1
+
+
+def test_tracer_rejects_out_of_order_end():
+    tr = trace.Tracer()
+    outer = tr.begin("outer", "run", 0)
+    tr.begin("inner", "slot", 0)
+    with pytest.raises(trace.TraceError):
+        tr.end(outer)  # inner is still open on the same track
+
+
+def test_tracer_rejects_end_without_begin():
+    tr = trace.Tracer()
+    sp = tr.begin("a", "run", 0)
+    tr.end(sp)
+    with pytest.raises(trace.TraceError):
+        tr.end(sp)
+
+
+def test_null_tracer_is_falsy_noop():
+    assert not trace.NULL
+    assert not trace.NullTracer()
+    with trace.NULL.span("x", "run", 0) as sp:
+        assert sp is None
+    trace.NULL.bump("c", {"a": 1.0})  # must not raise
+
+
+def test_counter_totals_accumulate():
+    tr = trace.Tracer()
+    tr.bump("bytes", {"0": 10.0, "1": 5.0})
+    tr.bump("bytes", {"0": 10.0})
+    assert tr.totals("bytes") == {"0": 20.0, "1": 5.0}
+
+
+# ---------------------------------------------------------------------------
+# traced chain run: schema invariants
+# ---------------------------------------------------------------------------
+
+
+def test_traced_chain_schema_valid(traced_run, tmp_path):
+    _, tracer, _ = traced_run
+    doc = trace.to_chrome(tracer)
+    assert trace.validate(doc) == []
+    # Chrome JSON round-trips json.loads, via the actual file writer
+    path = tmp_path / "trace.json"
+    trace.write_chrome(tracer, str(path))
+    loaded = json.loads(path.read_text())
+    assert trace.validate(loaded) == []
+    assert {e["ph"] for e in loaded["traceEvents"]} >= {"X", "C", "M"}
+
+
+def test_traced_chain_no_open_spans(traced_run):
+    _, tracer, _ = traced_run
+    assert tracer.open_spans() == []
+
+
+def test_channel_counters_sum_exactly_to_plan(traced_run):
+    plan, tracer, res = traced_run
+    per_ch = tracer.totals(COUNTER_CHANNEL_BYTES)
+    assert per_ch, "no channel_bytes counters recorded"
+    assert sum(per_ch.values()) == res.batches * plan.host_stream_bytes
+    # and the per-channel split helper is exact on its own
+    split = host_channel_bytes(plan.buffers)
+    assert sum(split.values()) == plan.host_stream_bytes
+
+
+def test_occupancy_counter_matches_plan(traced_run):
+    plan, tracer, _ = traced_run
+    occ = tracer.totals(COUNTER_OCCUPANCY)
+    assert occ == {
+        sp.name: float(sp.cu_count) for sp in plan.stages
+    }
+
+
+def test_tracer_off_is_bitwise_identical(cfd_chain):
+    plan = mchain.plan_chain(
+        cfd_chain, target=channels.ALVEO_U280, batch_elements=64,
+        prefetch_depth=1, n_eq=128,
+    )
+    rng = np.random.default_rng(5)
+    inputs, shared = _chain_data(cfd_chain, 128, rng)
+    kw = dict(inputs=inputs, shared=shared, n_eq=128, max_batches=2,
+              pipeline_stages=True)
+    plain = run_chain(cfd_chain, plan, **kw)
+    traced = run_chain(cfd_chain, plan, tracer=trace.Tracer(), **kw)
+    nulled = run_chain(cfd_chain, plan, tracer=trace.NULL, **kw)
+    assert plain.checksums == traced.checksums == nulled.checksums
+
+
+# ---------------------------------------------------------------------------
+# attribution
+# ---------------------------------------------------------------------------
+
+
+def test_attribution_matches_span_sums(traced_run):
+    plan, tracer, _ = traced_run
+    a = trace.attribute(tracer, plan)
+    assert a.n_batches == N_B
+    assert len(a.stages) == len(plan.stages)
+    for i, s in enumerate(a.stages):
+        assert s.name == plan.stages[i].name
+        assert s.slots == N_B  # every stage dispatched every batch
+        disp = [
+            sp for sp in tracer.spans
+            if sp.cat == CAT_DISPATCH and int(sp.args["stage"]) == i
+        ]
+        assert s.measured_s == pytest.approx(
+            sum(sp.duration for sp in disp)
+        )
+        assert s.measured_s > 0
+    # per-stage slot spans partition the run: one per (stage, batch)
+    slots = [sp for sp in tracer.spans if sp.cat == CAT_SLOT]
+    assert len(slots) == N_B * len(plan.stages)
+    assert a.wall_s > 0 and a.pred_s_per_batch > 0
+
+
+def test_attribution_report_renders(traced_run):
+    plan, tracer, _ = traced_run
+    rep = trace.attribution_report(tracer, plan)
+    assert rep.startswith("measured:")
+    for sp in plan.stages:
+        assert sp.name in rep
+    assert "-> ok)" in rep  # counter sum matched the plan
+
+
+def test_golden_measured_section_stable(traced_run):
+    """The deterministic fields of the measured: section (structure,
+    predictions, counter sums -- no wall times) are golden-locked."""
+    plan, tracer, _ = traced_run
+    rep = trace.attribution_report(tracer, plan, stable_only=True)
+    _golden_check("trace_measured_cfd_p5_alveo.txt", rep)
+
+
+# ---------------------------------------------------------------------------
+# straggler monitoring -> trace annotations
+# ---------------------------------------------------------------------------
+
+
+def test_monitor_flags_become_span_annotations(cfd_chain):
+    plan = mchain.plan_chain(
+        cfd_chain, target=channels.ALVEO_U280, batch_elements=64,
+        prefetch_depth=1, n_eq=192,
+    )
+    rng = np.random.default_rng(9)
+    inputs, shared = _chain_data(cfd_chain, 192, rng)
+    tracer = trace.Tracer()
+    # factor 0 flags every post-seed step: deterministic on any machine
+    mon = StepMonitor(straggler_factor=0.0, warmup=0)
+    res = run_chain(
+        cfd_chain, plan, inputs=inputs, shared=shared, n_eq=192,
+        max_batches=3, pipeline_stages=True, tracer=tracer, monitor=mon,
+    )
+    assert res.straggler_batches == (1, 2)
+    flagged = sorted(
+        int(sp.args["batch"]) for sp in tracer.spans
+        if sp.cat == CAT_SYNC and sp.args.get("straggler")
+    )
+    assert flagged == [1, 2]
+    assert trace.attribute(tracer, plan).straggler_batches == (1, 2)
+
+
+# ---------------------------------------------------------------------------
+# profile store
+# ---------------------------------------------------------------------------
+
+
+def test_profile_store_roundtrip(traced_run, tmp_path):
+    plan, tracer, _ = traced_run
+    path = str(tmp_path / "profile.json")
+    store = trace.ProfileStore(path=path, fingerprint="testfp")
+    n = store.record_trace(tracer, plan)
+    assert n == len(plan.stages) + 1  # per-stage + chain-level samples
+
+    # persists: a fresh store reloads the samples and refits from them
+    store2 = trace.ProfileStore(path=path, fingerprint="testfp")
+    assert len(store2) == n
+    corr = store2.correction(plan.target.name, plan.signature)
+    assert corr.n_samples == n
+    assert corr.factor > 0 and corr.factor != pytest.approx(1.0)
+    assert any(
+        f is not None for f in
+        (corr.host_factor, corr.hbm_factor, corr.compute_factor)
+    )
+    # a different machine's fingerprint sees none of it
+    other = trace.ProfileStore(path=path, fingerprint="elsewhere")
+    assert other.samples(plan.target.name) == []
+
+
+def test_profile_store_env_override(tmp_path, monkeypatch):
+    p = str(tmp_path / "env_profile.json")
+    monkeypatch.setenv(trace.PROFILE_ENV, p)
+    assert trace.default_profile_path() == p
+    store = trace.ProfileStore()
+    assert store.path == p
+
+
+def test_explore_chain_warm_profile_reranks(traced_run, cfd_chain,
+                                            tmp_path):
+    """The acceptance round-trip: trace -> store -> refit -> the DSE
+    ranking is re-priced by the learned per-term corrections."""
+    plan, tracer, _ = traced_run
+    path = str(tmp_path / "profile.json")
+    store = trace.ProfileStore(path=path, fingerprint="testfp")
+    assert store.record_trace(tracer, plan) > 0
+
+    space = dse.ChainDesignSpace(
+        backends=("xla", "staged"), batch_divisors=(1, 2),
+        prefetch_depths=(0, 1), cu_counts=(1,), max_placements=2,
+    )
+    cold = dse.explore_chain(
+        cfd_chain, target=channels.ALVEO_U280, n_eq=1 << 10, space=space,
+    )
+    warm = dse.explore_chain(
+        cfd_chain, target=channels.ALVEO_U280, n_eq=1 << 10, space=space,
+        profile=store,
+    )
+    assert all(c.corrected_s_per_element is None for c in cold)
+    feas = [c for c in warm if c.plan.feasible]
+    assert feas and all(
+        c.corrected_s_per_element is not None for c in feas
+    )
+    # the correction actually moved the predictions...
+    assert any(
+        c.corrected_s_per_element != c.predicted_s_per_element
+        for c in feas
+    )
+    # ...and the warm ranking is ordered by the corrected cost
+    vals = [c.corrected_s_per_element for c in feas]
+    assert vals == sorted(vals)
+
+
+def test_per_term_correction_can_reorder(cfd_chain):
+    """Per-term factors are not a monotone rescale: penalizing the cold
+    leader's own bottleneck term demotes it below a candidate bound by a
+    different term."""
+    space = dse.ChainDesignSpace(
+        backends=("xla", "staged"), batch_divisors=(1,),
+        prefetch_depths=(0, 1), cu_counts=(1,), max_placements=2,
+    )
+    # cpu-host is the one datasheet whose chain candidates split between
+    # hbm- and compute-bound (ALVEO streaming is always host-link-bound)
+    cands = dse.explore_chain(
+        cfd_chain, target=channels.CPU_HOST, n_eq=1 << 10, space=space,
+    )
+    feas = [c for c in cands if c.plan.feasible]
+    leader = feas[0]
+    term = leader.plan.cost.bottleneck
+    if all(c.plan.cost.bottleneck == term for c in feas):
+        pytest.skip("design space has a single bottleneck term")
+    kw = {
+        "host-link": "host_factor", "hbm": "hbm_factor",
+        "compute": "compute_factor",
+    }[term]
+    corr = dse.CostCorrection(factor=1.0, n_samples=1, **{kw: 1e3})
+    reranked = dse.apply_correction(list(feas), corr)
+    assert reranked[0].plan is not leader.plan
+
+
+def test_profile_store_fifo_bound(tmp_path):
+    from repro.trace.profile import MAX_SAMPLES_PER_KEY
+
+    store = trace.ProfileStore(
+        path=str(tmp_path / "p.json"), fingerprint="fp"
+    )
+    samples = [
+        {"predicted_s": 1.0, "measured_s": 2.0, "bottleneck": "hbm"}
+        for _ in range(MAX_SAMPLES_PER_KEY + 50)
+    ]
+    store.record("t", "sig", samples, save=False)
+    assert len(store) == MAX_SAMPLES_PER_KEY

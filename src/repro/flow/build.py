@@ -63,6 +63,104 @@ def resolve_target(
 
 
 # ---------------------------------------------------------------------------
+# compile-identity fingerprints (the serving layer's plan-cache key)
+# ---------------------------------------------------------------------------
+
+
+def program_fingerprint(prog: ir.Program) -> str:
+    """Canonical sha1 of a program's structure.
+
+    Node uids and einsum index ids are process-global fresh counters, so
+    two parses of the same source produce different raw objects; this
+    renumbers both (nodes in topological order, einsum ids per node in
+    first-use order) so equal graphs hash equal while any structural
+    change -- shapes, ops, bindings, outputs, element marking -- does
+    not.  Fingerprint the *post-rewrite* program to key a plan cache:
+    sources that optimize to the same graph then share one entry.
+    """
+    import hashlib
+
+    topo = prog.toposort()
+    num = {n.uid: i for i, n in enumerate(topo)}
+    parts: List[str] = []
+    for n in topo:
+        if isinstance(n, ir.Input):
+            parts.append(f"in:{n.name}:{tuple(n.shape)}")
+        elif isinstance(n, ir.Einsum):
+            ids: Dict[int, int] = {}
+
+            def ren(j: int) -> int:
+                return ids.setdefault(j, len(ids))
+
+            subs = ";".join(
+                ",".join(str(ren(j)) for j in s) for s in n.in_subs
+            )
+            out = ",".join(str(ren(j)) for j in n.out_subs)
+            ops = ",".join(str(num[o.uid]) for o in n.ops)
+            parts.append(f"ein:{ops}:{subs}->{out}:{tuple(n.shape)}")
+        elif isinstance(n, ir.Ewise):
+            ops = ",".join(str(num[o.uid]) for o in n.operands())
+            parts.append(f"ew:{n.op}:{ops}:{n.const}:{tuple(n.shape)}")
+        else:  # future node kinds still hash deterministically
+            ops = ",".join(str(num[o.uid]) for o in n.operands())
+            parts.append(f"{type(n).__name__}:{ops}:{tuple(n.shape)}")
+    parts.append("outs:" + ",".join(
+        f"{name}={num[v.uid]}" for name, v in sorted(prog.outputs.items())
+    ))
+    parts.append("elem:" + ",".join(sorted(prog.element_vars)))
+    return hashlib.sha1("|".join(parts).encode()).hexdigest()
+
+
+def topology_fingerprint(devices: Optional[int]) -> str:
+    """The cache-key view of ``compile(devices=...)``: what machine the
+    placement was co-scheduled for.  ``0`` (detect) resolves the local
+    pool *now*, so a cache entry can never leak across pool changes."""
+    if devices is None:
+        return "auto"
+    if devices == 0:
+        t = DeviceTopology.detect()
+        return f"{t.n_devices}x{t.device_kind}"
+    return f"{devices}xgeneric"
+
+
+def cache_key(
+    source: str,
+    *,
+    element_vars: Sequence[str] = (),
+    target: Union[None, str, channels.MemoryTarget] = None,
+    policy: Union[str, object] = "float32",
+    optimize: bool = True,
+    devices: Optional[int] = None,
+    **kwargs,
+) -> str:
+    """The plan-cache key for one :func:`compile` call: ``(sha of the
+    post-rewrite program, target name, policy, topology fingerprint)``
+    plus a digest of every remaining compile knob, ``/``-joined.
+
+    Runs only the front/middle-end (parse + rewrite) -- the expensive
+    planning/DSE work is exactly what a cache hit skips.  Knobs that are
+    ``None`` (the compile defaults) are excluded from the digest, so
+    spelling a default out does not split the cache; the serving layer
+    passes one normalized kwarg dict for the rest.
+    """
+    import hashlib
+
+    pol = policy if isinstance(policy, str) else policy.name
+    tgt = resolve_target(target)
+    prog = dsl.parse(source, element_vars=element_vars)
+    if optimize:
+        prog = rewrite.optimize(prog)
+    extra = hashlib.sha1(repr(sorted(
+        (k, repr(v)) for k, v in kwargs.items()
+        if v is not None and k not in ("name", "profile")
+    )).encode()).hexdigest()[:12]
+    return "/".join([
+        program_fingerprint(prog), tgt.name, pol,
+        topology_fingerprint(devices), extra,
+    ])
+
+
+# ---------------------------------------------------------------------------
 # stage extraction
 # ---------------------------------------------------------------------------
 
@@ -457,6 +555,7 @@ def compile(
     dse: bool = False,
     dse_space=None,
     measure_top: int = 0,
+    profile=None,
 ) -> CompiledSystem:
     """Compile a CFDlang program end-to-end into a planned, executable
     memory architecture.
@@ -476,7 +575,11 @@ def compile(
     ``dse=True`` sweeps chain design points -- including joint per-stage
     ``(cu, depth)`` placements over that topology -- and adopts the best
     feasible plan, recompiling stages if the winning backends (or any
-    Pallas stage's VMEM ``block_elements``) differ.
+    Pallas stage's VMEM ``block_elements``) differ.  ``profile`` (a
+    ``trace.ProfileStore``, a path, or ``True`` for the default
+    location) warm-starts that sweep's ranking from the persistent
+    per-machine profile store and records any measured candidates back
+    -- exactly ``explore_chain(profile=...)``.
     """
     if isinstance(policy, str):
         if policy not in POLICIES:
@@ -560,6 +663,7 @@ def compile(
         candidates = dse_mod.explore_chain(
             chain, target=target, n_eq=n_eq if n_eq else 1 << 16,
             space=space, topology=topology, measure_top=measure_top,
+            profile=profile,
         )
         winner = next((c for c in candidates if c.plan.feasible), None)
         if winner is not None:

@@ -42,7 +42,9 @@ def _parse_args(argv: Optional[Sequence[str]]) -> argparse.Namespace:
                     "stages (paper's 1/2/3/7-module sweeps)")
     ap.add_argument("--batch-elements", type=int, default=None,
                     help="override E (default: planner auto-sizes + pads)")
-    ap.add_argument("--prefetch-depth", type=int, default=1)
+    ap.add_argument("--prefetch-depth", default="1",
+                    help="dispatch-ring depth per stage: one int "
+                    "(chain-wide) or a comma-separated per-stage vector")
     ap.add_argument("--cu-count", default="1",
                     help="CUs per stage: one int (chain-wide) or a "
                     "comma-separated per-stage vector")
@@ -68,10 +70,23 @@ def _parse_args(argv: Optional[Sequence[str]]) -> argparse.Namespace:
                     "prints the measured: pred-vs-measured attribution")
     ap.add_argument("--profile", default=None, nargs="?", const="",
                     metavar="PATH",
-                    help="with --trace: record the traced run into the "
-                    "persistent profile store (default path, or "
-                    "$REPRO_PROFILE, when PATH is omitted)")
+                    help="persistent profile store (default path, or "
+                    "$REPRO_PROFILE, when PATH is omitted): with "
+                    "--trace, record the traced run into it; with "
+                    "--dse, warm-start the ranking from it; requires "
+                    "at least one of the two")
     return ap.parse_args(argv)
+
+
+def _parse_per_stage(raw, flag: str):
+    """``"2"`` -> 2; ``"2,1,1"`` -> [2, 1, 1]; junk -> ValueError naming
+    the flag (both --cu-count and --prefetch-depth accept either)."""
+    try:
+        parts = [c.strip() for c in str(raw).split(",")]
+        return (int(parts[0]) if len(parts) == 1
+                else [int(c) for c in parts])
+    except ValueError:
+        raise ValueError(f"bad {flag} {raw!r}") from None
 
 
 def main(argv: Optional[Sequence[str]] = None) -> int:
@@ -97,14 +112,23 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     if args.backends:
         backends = tuple(b.strip() for b in args.backends.split(","))
     try:
-        cu_parts = [c.strip() for c in str(args.cu_count).split(",")]
-        cu_count = (
-            int(cu_parts[0]) if len(cu_parts) == 1
-            else [int(c) for c in cu_parts]
+        cu_count = _parse_per_stage(args.cu_count, "--cu-count")
+        prefetch_depth = _parse_per_stage(
+            args.prefetch_depth, "--prefetch-depth"
         )
-    except ValueError:
-        print(f"error: bad --cu-count {args.cu_count!r}", file=sys.stderr)
+    except ValueError as e:
+        print(f"error: {e}", file=sys.stderr)
         return 2
+    if args.profile is not None and not args.trace and not args.dse:
+        # a silently inert flag is worse than an error: recording needs a
+        # traced run, warm-starting needs a DSE sweep
+        print(
+            "error: --profile does nothing without --trace (record the "
+            "run) or --dse (warm-start the ranking)",
+            file=sys.stderr,
+        )
+        return 2
+    profile = (args.profile or True) if args.profile is not None else None
     try:
         system = build.compile(
             source,
@@ -116,11 +140,12 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
             backends=backends,
             max_stages=args.max_stages,
             batch_elements=args.batch_elements,
-            prefetch_depth=args.prefetch_depth,
+            prefetch_depth=prefetch_depth,
             cu_count=cu_count,
             devices=args.devices,
             n_eq=args.n_eq,
             dse=args.dse,
+            profile=profile if args.dse else None,
         )
     except (ParseError, build.FlowError, IRError, ValueError) as e:
         print(f"error: {e}", file=sys.stderr)

@@ -1,2 +1,2 @@
 """Launchers: mesh construction, the multi-pod dry-run driver, and the
-train/serve entry points."""
+train entry point.  (Serving lives in :mod:`repro.serve`.)"""

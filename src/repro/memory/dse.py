@@ -26,6 +26,14 @@ from .channels import MemoryTarget, detect_target
 from .plan import (BufferSpec, CostBreakdown, MemoryPlan, channels_used,
                    hbm_stream_bytes, host_stream_bytes)
 
+#: Cost-model epoch.  Bump this whenever the analytic model's terms
+#: change meaning (new term, re-derived constant, different bottleneck
+#: attribution): ``trace.ProfileStore`` stamps every recorded sample
+#: with the epoch and a ``correction()`` refit ignores samples recorded
+#: under any other epoch, so measured/predicted ratios from an obsolete
+#: model can never steer the current one.
+COST_MODEL_VERSION = 1
+
 #: Throughput of each scalar policy relative to the target's native
 #: matmul peak (TPU: bf16 MXU; f32 runs at half rate, f64 and the
 #: integer-emulated fixed-point formats far below).

@@ -27,6 +27,12 @@ Its multi-device mode (``place_fns``, built from a
 :func:`placement_meshes`) runs one dispatch ring per *device group*:
 each stage shards its element batch over its own group's mesh and the
 HBM-resident handoff is resharded between groups as it crosses.
+
+:class:`StagePipelineDriver` is the reentrant core both build on: the
+same skewed ring as a feed/tick state machine, so a long-running caller
+(``repro.serve``) can push batches as they arrive, idle the ring dry,
+and resume -- with optional per-batch error capture instead of the
+batch-job raise-through.
 """
 from __future__ import annotations
 
@@ -241,106 +247,296 @@ def run_stage_pipelined(
     with ``straggler=True``.  Both only observe -- per-batch results are
     identical with or without them.
     """
-    stage_fns = list(stage_fns)
-    n_stages = len(stage_fns)
-    if n_stages == 0:
-        raise ValueError("need at least one stage")
-    if place_fns is not None and len(place_fns) != n_stages:
-        raise ValueError(
-            f"need {n_stages} place fns, got {len(place_fns)}"
+    driver = StagePipelineDriver(
+        stage_fns, stage_fn=stage_fn, depths=depths, reduce_fn=reduce_fn,
+        defer_sync=defer_sync, place_fns=place_fns, tracer=tracer,
+        monitor=monitor, stage_names=stage_names,
+    )
+    it = iter(batches)
+    while True:
+        while driver.wants_input:
+            try:
+                driver.feed(next(it))
+            except StopIteration:
+                driver.close()
+                break
+        if driver.idle:
+            break
+        driver.tick()
+    return [v for _, v in driver.take()]
+
+
+class _Poison:
+    """A captured per-batch failure riding the carry slot: downstream
+    stages skip the batch and retire delivers the error in its place."""
+
+    __slots__ = ("error",)
+
+    def __init__(self, error: BaseException) -> None:
+        self.error = error
+
+
+class StagePipelineDriver:
+    """The skewed dispatch ring of :func:`run_stage_pipelined` as a
+    reentrant feed/tick state machine.
+
+    :func:`run_stage_pipelined` drives it feed-while-hungry/tick-until-
+    dry over a finite batch source and is tick-for-tick identical to the
+    closed-form loop it replaced.  A long-running caller (the
+    ``repro.serve`` engine) instead interleaves :meth:`feed` and
+    :meth:`tick` as admission waves arrive: each fed batch remembers the
+    tick it *entered* the ring, and stage ``i`` dispatches batch ``k``
+    once (a) stage ``i-1`` has finished it and (b) ``skews[i]`` ticks
+    have passed since entry -- so a ring that went idle resumes with the
+    same per-stage skew for the batches that follow, no global restart.
+
+    ``capture_errors=True`` turns the batch-job raise-through into
+    per-batch delivery: a stage/place/reduce/sync failure poisons that
+    batch's record, downstream stages skip it, and :meth:`take` yields
+    ``(k, exception)`` for it -- the ring itself never wedges.  The
+    default (``False``) propagates, exactly like the batch driver.
+    """
+
+    def __init__(
+        self,
+        stage_fns: Sequence[Callable[[Any, Any], Any]],
+        *,
+        stage_fn: Callable[[Any], Any] = lambda x: x,
+        depths: Union[int, Sequence[int]] = 1,
+        reduce_fn: Optional[Callable[[Any], Any]] = None,
+        defer_sync: Optional[bool] = None,
+        place_fns: Optional[Sequence[Optional[Callable[[Any, Any],
+                                                       Any]]]] = None,
+        tracer=None,
+        monitor=None,
+        stage_names: Optional[Sequence[str]] = None,
+        capture_errors: bool = False,
+    ) -> None:
+        stage_fns = list(stage_fns)
+        n_stages = len(stage_fns)
+        if n_stages == 0:
+            raise ValueError("need at least one stage")
+        if place_fns is not None and len(place_fns) != n_stages:
+            raise ValueError(
+                f"need {n_stages} place fns, got {len(place_fns)}"
+            )
+        if isinstance(depths, int):
+            depths = [depths] * n_stages
+        else:
+            depths = list(depths)
+        if len(depths) != n_stages:
+            raise ValueError(
+                f"need {n_stages} stage depths, got {len(depths)}"
+            )
+        if any(d < 0 for d in depths):
+            raise ValueError(f"stage depths must be >= 0, got {depths}")
+        if defer_sync is None:
+            defer_sync = any(d > 0 for d in depths)
+        names = (list(stage_names) if stage_names
+                 else [f"stage{i}" for i in range(n_stages)])
+        if len(names) != n_stages:
+            raise ValueError(
+                f"need {n_stages} stage names, got {len(names)}"
+            )
+        if tracer:
+            tracer.name_track(_HOST_TRACK, "host")
+            for i, nm in enumerate(names):
+                tracer.name_track(1 + i, nm)
+            stage_fn = _traced_stage_fn(stage_fn, tracer)
+        self.stage_fns = stage_fns
+        self.stage_fn = stage_fn
+        self.depths = depths
+        self.skews = stage_skews(depths)
+        self.reduce_fn = reduce_fn
+        self.defer_sync = defer_sync
+        self.place_fns = place_fns
+        self.tracer = tracer
+        self.monitor = monitor
+        self.names = names
+        self.capture_errors = capture_errors
+        # -- ring state ------------------------------------------------------
+        self._staged: deque = deque()       # staged, not yet entered
+        #: batch k -> [staged, carry]; held from entry until retire (the
+        #: window the planner prices as ring replicas)
+        self._records: Dict[int, List[Any]] = {}
+        self._entry_tick: Dict[int, int] = {}
+        self._done = [0] * n_stages         # next batch stage i dispatches
+        self._retire_next = 0
+        self._entered = 0                   # batches entered into the ring
+        self._accepted = 0                  # batches fed (entered + staged)
+        self._t = 0
+        self._pending: deque = deque()      # deferred (value, k) syncs
+        self._out: deque = deque()          # retired (k, result) in order
+        self._closed = False
+        self._last_retire = (
+            [time.perf_counter()] if monitor is not None else None
         )
-    if isinstance(depths, int):
-        depths = [depths] * n_stages
-    else:
-        depths = list(depths)
-    if len(depths) != n_stages:
-        raise ValueError(f"need {n_stages} stage depths, got {len(depths)}")
-    if any(d < 0 for d in depths):
-        raise ValueError(f"stage depths must be >= 0, got {depths}")
-    if defer_sync is None:
-        defer_sync = any(d > 0 for d in depths)
-    skews = stage_skews(depths)
-    max_skew = skews[-1]
 
-    names = (list(stage_names) if stage_names
-             else [f"stage{i}" for i in range(n_stages)])
-    if len(names) != n_stages:
-        raise ValueError(f"need {n_stages} stage names, got {len(names)}")
-    if tracer:
-        tracer.name_track(_HOST_TRACK, "host")
-        for i, nm in enumerate(names):
-            tracer.name_track(1 + i, nm)
-        stage_fn = _traced_stage_fn(stage_fn, tracer)
+    # -- feeding -------------------------------------------------------------
+    @property
+    def wants_input(self) -> bool:
+        """True while the host staging window (``depths[0]`` ahead plus
+        the one entering this tick) has room and the source isn't closed."""
+        return not self._closed and len(self._staged) <= self.depths[0]
 
-    staged_seq = prefetch(batches, stage_fn, depths[0])
-    #: batch index -> [staged, carry]; holds a batch from the tick stage
-    #: 0 dispatches it until the last stage retires it (the window the
-    #: planner prices as ring replicas).
-    records: Dict[int, List[Any]] = {}
-    results: List[Any] = []
-    pending: deque = deque()
-    last_retire = [time.perf_counter()] if monitor is not None else None
+    @property
+    def in_flight(self) -> int:
+        """Batches accepted but not yet delivered through :meth:`take`."""
+        return (len(self._staged) + len(self._records)
+                + len(self._pending) + len(self._out))
 
-    def sync_get(value: Any, k: int) -> Any:
+    @property
+    def accepted(self) -> int:
+        """Total batches fed so far (the next :meth:`feed`'s index)."""
+        return self._accepted
+
+    @property
+    def idle(self) -> bool:
+        """True when nothing is staged, in the ring, or pending sync."""
+        return not (self._staged or self._records or self._pending)
+
+    def feed(self, item: Any) -> int:
+        """Stage one batch into the ring; returns its batch index."""
+        if self._closed:
+            raise RuntimeError("driver is closed")
+        k = self._accepted
+        try:
+            self._staged.append(self.stage_fn(item))
+        except Exception as e:
+            if not self.capture_errors:
+                raise
+            self._staged.append(_Poison(e))
+        self._accepted += 1
+        return k
+
+    def close(self) -> None:
+        """No more batches will be fed; remaining ticks drain the ring."""
+        self._closed = True
+
+    # -- the tick ------------------------------------------------------------
+    def tick(self) -> bool:
+        """Advance the ring one tick: enter at most one staged batch,
+        give every stage its one skew-scheduled dispatch, retire at most
+        one finished batch.  Returns False once nothing progressed (ring
+        dry -- feed more or stop)."""
+        tracer = self.tracer
+        progressed = False
+        if self._staged:
+            k = self._entered
+            staged = self._staged.popleft()
+            if isinstance(staged, _Poison):
+                self._records[k] = [None, staged]
+            else:
+                self._records[k] = [staged, None]
+            self._entry_tick[k] = self._t
+            self._entered += 1
+            progressed = True
+        t = self._t
+        for i, fn in enumerate(self.stage_fns):
+            k = self._done[i]
+            if k not in self._records or k >= self._entered:
+                continue
+            if t - self._entry_tick[k] < self.skews[i]:
+                continue  # ring depth: stage i lags entry by skews[i]
+            if i > 0 and self._done[i - 1] <= k:
+                continue  # producer stage hasn't finished this batch
+            self._done[i] = k + 1
+            progressed = True
+            rec = self._records[k]
+            if isinstance(rec[1], _Poison):
+                continue  # upstream failure: skip, deliver at retire
+            slot = (tracer.begin(f"b{k}", _CAT_SLOT, 1 + i,
+                                 stage=i, batch=k, tick=t)
+                    if tracer else None)
+            try:
+                if self.place_fns is not None and self.place_fns[i] is not None:
+                    if tracer:
+                        with tracer.span(f"reshard b{k}", _CAT_HANDOFF,
+                                         1 + i, stage=i, batch=k):
+                            rec[0], rec[1] = self.place_fns[i](rec[0], rec[1])
+                    else:
+                        rec[0], rec[1] = self.place_fns[i](rec[0], rec[1])
+                if tracer:
+                    with tracer.span(self.names[i], _CAT_DISPATCH, 1 + i,
+                                     stage=i, batch=k):
+                        rec[1] = fn(rec[0], rec[1])
+                else:
+                    rec[1] = fn(rec[0], rec[1])
+            except Exception as e:
+                if not self.capture_errors:
+                    raise
+                rec[1] = _Poison(e)
+            if slot is not None:
+                tracer.end(slot)
+        k = self._retire_next
+        if k in self._records and self._done[-1] > k:
+            rec = self._records.pop(k)
+            del self._entry_tick[k]
+            self._retire_next += 1
+            self._retire(rec[1], k)
+            progressed = True
+        if not self._records and not self._staged:
+            while self._pending:
+                self._flush_one()
+        self._t += 1
+        return progressed
+
+    # -- retire / sync -------------------------------------------------------
+    def _retire(self, carry: Any, k: int) -> None:
+        if isinstance(carry, _Poison):
+            self._out.append((k, carry.error))
+            return
+        try:
+            value = (self.reduce_fn(carry)
+                     if self.reduce_fn is not None else carry)
+        except Exception as e:
+            if not self.capture_errors:
+                raise
+            self._out.append((k, e))
+            return
+        if not self.defer_sync:
+            self._deliver_sync(value, k)
+            return
+        self._pending.append((value, k))
+        if len(self._pending) > 1:
+            self._flush_one()
+
+    def _flush_one(self) -> None:
+        self._deliver_sync(*self._pending.popleft())
+
+    def _deliver_sync(self, value: Any, k: int) -> None:
+        try:
+            self._out.append((k, self._sync_get(value, k)))
+        except Exception as e:
+            if not self.capture_errors:
+                raise
+            self._out.append((k, e))
+
+    def _sync_get(self, value: Any, k: int) -> Any:
+        tracer = self.tracer
         sp = (tracer.begin(f"sync b{k}", _CAT_SYNC, _HOST_TRACK, batch=k)
               if tracer else None)
-        got = jax.device_get(value)
-        if monitor is not None:
+        try:
+            got = jax.device_get(value)
+        except Exception:
+            if self.capture_errors and sp is not None:
+                tracer.end(sp)
+            raise
+        if self.monitor is not None:
             now = time.perf_counter()
-            flagged = monitor.record(now - last_retire[0])
-            last_retire[0] = now
+            flagged = self.monitor.record(now - self._last_retire[0])
+            self._last_retire[0] = now
             if flagged and sp is not None:
                 sp.args["straggler"] = True
         if sp is not None:
             tracer.end(sp)
         return got
 
-    def retire(carry: Any, k: int) -> None:
-        value = reduce_fn(carry) if reduce_fn is not None else carry
-        if not defer_sync:
-            results.append(sync_get(value, k))
-            return
-        pending.append((value, k))
-        if len(pending) > 1:
-            results.append(sync_get(*pending.popleft()))
-
-    n: Optional[int] = None  # total batches, known once the source drains
-    t = 0                    # tick: stage i processes batch t - skews[i]
-    while n is None or t < n + max_skew:
-        if n is None:
-            try:
-                records[t] = [next(staged_seq), None]
-            except StopIteration:
-                n = t
-                if n == 0:
-                    break
-        for i, fn in enumerate(stage_fns):
-            k = t - skews[i]
-            if k < 0 or (n is not None and k >= n):
-                continue  # pipeline fill (k<0) or drain (k>=n)
-            rec = records[k]
-            slot = (tracer.begin(f"b{k}", _CAT_SLOT, 1 + i,
-                                 stage=i, batch=k, tick=t)
-                    if tracer else None)
-            if place_fns is not None and place_fns[i] is not None:
-                if tracer:
-                    with tracer.span(f"reshard b{k}", _CAT_HANDOFF, 1 + i,
-                                     stage=i, batch=k):
-                        rec[0], rec[1] = place_fns[i](rec[0], rec[1])
-                else:
-                    rec[0], rec[1] = place_fns[i](rec[0], rec[1])
-            if tracer:
-                with tracer.span(names[i], _CAT_DISPATCH, 1 + i,
-                                 stage=i, batch=k):
-                    rec[1] = fn(rec[0], rec[1])
-            else:
-                rec[1] = fn(rec[0], rec[1])
-            if slot is not None:
-                tracer.end(slot)
-        k = t - max_skew
-        if k >= 0 and (n is None or k < n):
-            retire(records.pop(k)[1], k)
-        t += 1
-    while pending:
-        results.append(sync_get(*pending.popleft()))
-    return results
+    # -- results -------------------------------------------------------------
+    def take(self) -> List[Tuple[int, Any]]:
+        """Drain the delivered results: ``(batch index, realized value)``
+        pairs in batch order (the value is the captured exception for a
+        poisoned batch under ``capture_errors``)."""
+        out = list(self._out)
+        self._out.clear()
+        return out

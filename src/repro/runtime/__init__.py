@@ -1,5 +1,5 @@
 """Training/serving runtime: step builders, fault-tolerant loop,
 monitoring."""
-from . import losses, monitor, serve, train
+from . import losses, monitor, train
 
-__all__ = ["losses", "monitor", "serve", "train"]
+__all__ = ["losses", "monitor", "train"]

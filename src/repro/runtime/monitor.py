@@ -5,11 +5,17 @@ step-time outlier on every worker because SPMD steps are synchronous.  The
 monitor keeps an EWMA of step time and flags steps slower than
 ``straggler_factor`` x EWMA; the runtime's ``on_straggler`` hook can then
 evict the host / trigger elastic re-meshing (``plan_elastic_remesh``).
+
+:class:`RequestLatency` is the serving-side sibling: per-request
+submit-to-complete latency, summarized over a bounded recent window so a
+long-lived ``repro.serve`` engine can report p50/p95 without unbounded
+history.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from collections import deque
+from typing import Dict, List, Optional, Tuple
 
 
 @dataclasses.dataclass
@@ -40,6 +46,46 @@ class StepMonitor:
         if flagged:
             self.flags.append(self.count)
         return flagged
+
+
+@dataclasses.dataclass
+class RequestLatency:
+    """Submit-to-complete latency tracker for the serving engine.
+
+    Exact count/mean/max over the whole run; percentiles over the most
+    recent ``window`` requests (a serving engine outlives any full-
+    history quantile structure worth carrying here).
+    """
+
+    window: int = 1024
+
+    def __post_init__(self) -> None:
+        self.count = 0
+        self.total_s = 0.0
+        self.max_s = 0.0
+        self._recent: deque = deque(maxlen=self.window)
+
+    def record(self, latency_s: float) -> None:
+        self.count += 1
+        self.total_s += latency_s
+        self.max_s = max(self.max_s, latency_s)
+        self._recent.append(latency_s)
+
+    def quantile(self, q: float) -> float:
+        """q-quantile (nearest-rank) over the recent window; 0 if empty."""
+        if not self._recent:
+            return 0.0
+        xs = sorted(self._recent)
+        return xs[min(len(xs) - 1, int(q * len(xs)))]
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "count": float(self.count),
+            "mean_s": self.total_s / self.count if self.count else 0.0,
+            "p50_s": self.quantile(0.50),
+            "p95_s": self.quantile(0.95),
+            "max_s": self.max_s,
+        }
 
 
 def plan_elastic_remesh(

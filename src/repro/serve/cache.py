@@ -1,0 +1,84 @@
+"""Plan/system cache: compile once, serve forever.
+
+The flow's expensive half is planning -- ``plan_chain`` plus the
+optional DSE sweep -- and a serving process sees the same program
+compiled over and over.  :class:`PlanCache` keys each
+:func:`repro.flow.build.compile` call by
+``(sha of the post-rewrite program, target name, policy, topology
+fingerprint, knob digest)`` (:func:`repro.flow.build.cache_key`) and
+returns the cached :class:`~repro.flow.build.CompiledSystem` -- stage
+callables, plan, *and* the DSE winner/ranking it was adopted from -- on
+a repeat.  Only the front/middle-end (parse + rewrite, needed to
+fingerprint the program) re-runs on a hit; ``plan_chain`` does not.
+
+Hit/miss counts export through the standard counter machinery
+(``trace.attribution.COUNTER_PLAN_CACHE``) when a tracer is attached.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+from ..flow import build
+
+
+class PlanCache:
+    """In-process compile cache over :func:`repro.flow.build.compile`.
+
+    ``max_systems`` FIFO-bounds the cache (a CompiledSystem holds jitted
+    stage callables; a long-lived server should not grow one per novel
+    program without bound).
+    """
+
+    def __init__(self, tracer=None, max_systems: int = 64) -> None:
+        if max_systems < 1:
+            raise ValueError(f"max_systems must be >= 1, got {max_systems}")
+        self.tracer = tracer
+        self.max_systems = max_systems
+        self._systems: Dict[str, build.CompiledSystem] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def key(self, source: str, **compile_kwargs) -> str:
+        return build.cache_key(source, **compile_kwargs)
+
+    def lookup(self, source: str,
+               **compile_kwargs) -> Optional[build.CompiledSystem]:
+        """The cached system for this compile call, or None.  Does not
+        count as a hit/miss (use :meth:`get_or_compile` to serve)."""
+        return self._systems.get(self.key(source, **compile_kwargs))
+
+    def get_or_compile(self, source: str,
+                       **compile_kwargs) -> build.CompiledSystem:
+        """Serve one compile call through the cache.
+
+        Accepts exactly :func:`repro.flow.build.compile`'s keyword
+        arguments; on a miss they are forwarded verbatim and the result
+        is cached under the call's key.
+        """
+        key = self.key(source, **compile_kwargs)
+        system = self._systems.get(key)
+        if system is not None:
+            self.hits += 1
+            self._bump("hit")
+            return system
+        self.misses += 1
+        self._bump("miss")
+        system = build.compile(source, **compile_kwargs)
+        self._systems[key] = system
+        while len(self._systems) > self.max_systems:
+            self._systems.pop(next(iter(self._systems)))
+        return system
+
+    def _bump(self, what: str) -> None:
+        if self.tracer:
+            from ..trace.attribution import COUNTER_PLAN_CACHE
+
+            self.tracer.bump(COUNTER_PLAN_CACHE, {what: 1.0})
+
+    @property
+    def hit_rate(self) -> float:
+        n = self.hits + self.misses
+        return self.hits / n if n else 0.0
+
+    def __len__(self) -> int:
+        return len(self._systems)

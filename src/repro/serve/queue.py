@@ -1,0 +1,158 @@
+"""Admission queue: requests in, planner-sized waves out.
+
+The planner sizes one dispatch batch -- ``E`` elements -- to fill the
+target's HBM pseudo-channels; callers arrive with whatever element
+count their problem has.  The queue coalesces submitted requests, in
+FIFO order, into *waves* of exactly ``E`` elements: a large request
+spans several waves, several small requests share one, and an
+undersized final wave is zero-padded (the pad is accounted, never
+silent -- the same ``batch_pad_elements`` discipline the planner applies
+when it snaps ``E`` to a block size).
+
+A wave is only formed when ``E`` elements are pending, except when the
+max-latency knob (``max_wait_s``) says the oldest request has waited
+long enough, or the caller forces a flush (drain/shutdown) -- then a
+padded partial wave goes out.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    """One submitted request: per-element input rows in, output rows out.
+
+    ``inputs`` maps the chain's qualified host stream names
+    (``"stage.input"``) to arrays with a leading element axis of
+    ``n_elements`` rows.  ``outputs`` fills in as the request's waves
+    retire; ``error`` is set instead when any of its waves failed or the
+    engine shut down with the request in flight.
+    """
+
+    rid: int
+    inputs: Dict[str, np.ndarray]
+    n_elements: int
+    submitted_s: float = 0.0
+    completed_s: float = 0.0
+    outputs: Optional[Dict[str, np.ndarray]] = None
+    error: Optional[BaseException] = None
+    #: wave-slices this request was split into / already retired
+    parts: int = 0
+    parts_done: int = 0
+
+    @property
+    def done(self) -> bool:
+        """Finished -- successfully (``outputs``) or not (``error``)."""
+        return self.error is not None or (
+            self.parts > 0 and self.parts_done >= self.parts
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class WavePart:
+    """One request's element slice ``[lo:hi)`` placed at ``dst`` in the
+    wave's E-sized batch."""
+
+    request: ServeRequest
+    lo: int
+    hi: int
+    dst: int
+
+    @property
+    def n(self) -> int:
+        return self.hi - self.lo
+
+
+@dataclasses.dataclass(frozen=True)
+class Wave:
+    """One coalesced admission: parts covering ``E - pad_elements``
+    rows, the rest zero-padding."""
+
+    parts: tuple
+    pad_elements: int
+
+
+class AdmissionQueue:
+    """FIFO element coalescer over :class:`ServeRequest`.
+
+    ``clock`` is injectable for tests (defaults to ``time.monotonic``).
+    """
+
+    def __init__(self, batch_elements: int, *,
+                 max_wait_s: Optional[float] = None,
+                 clock=time.monotonic) -> None:
+        if batch_elements < 1:
+            raise ValueError(
+                f"batch_elements must be >= 1, got {batch_elements}"
+            )
+        self.batch_elements = batch_elements
+        self.max_wait_s = max_wait_s
+        self.clock = clock
+        #: (request, next element offset) cursors, FIFO
+        self._q: deque = deque()
+
+    def push(self, req: ServeRequest) -> None:
+        req.submitted_s = self.clock()
+        self._q.append([req, 0])
+
+    def remove(self, req: ServeRequest) -> bool:
+        """Drop a request that has not been (partially) admitted yet --
+        the reject path.  Returns False if admission already began."""
+        for entry in self._q:
+            if entry[0] is req:
+                if entry[1] != 0:
+                    return False
+                self._q.remove(entry)
+                return True
+        return False
+
+    @property
+    def pending_elements(self) -> int:
+        return sum(r.n_elements - off for r, off in self._q)
+
+    @property
+    def pending_requests(self) -> List[ServeRequest]:
+        return [r for r, _ in self._q]
+
+    def ready(self, *, force: bool = False) -> bool:
+        """Is a wave due?  A full ``E`` is pending, or the oldest
+        request has outwaited ``max_wait_s``, or the caller forces."""
+        if not self._q:
+            return False
+        if self.pending_elements >= self.batch_elements:
+            return True
+        if force:
+            return True
+        if self.max_wait_s is not None:
+            return self.clock() - self._q[0][0].submitted_s >= self.max_wait_s
+        return False
+
+    def pop_wave(self, *, force: bool = False) -> Optional[Wave]:
+        """Assemble the next wave, or None when none is due.
+
+        Requests are consumed strictly FIFO; a request larger than the
+        remaining room contributes a slice and keeps its place at the
+        head for the next wave.
+        """
+        if not self.ready(force=force):
+            return None
+        E = self.batch_elements
+        parts: List[WavePart] = []
+        dst = 0
+        while self._q and dst < E:
+            req, off = self._q[0]
+            take = min(req.n_elements - off, E - dst)
+            parts.append(WavePart(req, off, off + take, dst))
+            req.parts += 1
+            dst += take
+            if off + take >= req.n_elements:
+                self._q.popleft()
+            else:
+                self._q[0][1] = off + take
+        return Wave(parts=tuple(parts), pad_elements=E - dst)

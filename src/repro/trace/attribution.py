@@ -29,11 +29,19 @@ CAT_DISPATCH = "dispatch"  # the stage-fn call inside a slot
 CAT_HANDOFF = "handoff"    # cross-group reshard inside a slot
 CAT_STAGE_HOST = "stage-host"  # host-side staging of one batch
 CAT_SYNC = "sync"          # host sync (device_get) retiring a batch
+CAT_REQUEST = "request"    # serve-layer per-request span, submit->finish
 
 #: Counter names (``Tracer.bump`` series).
 COUNTER_CHANNEL_BYTES = "channel_bytes"
 COUNTER_PAD_ELEMENTS = "pad_elements"
 COUNTER_OCCUPANCY = "cu_occupancy"
+#: Serving-layer series (``repro.serve``).  All cumulative, like every
+#: counter here: queue depth at time t is submitted - admitted, plan-
+#: cache hit rate is hit / (hit + miss).
+COUNTER_PLAN_CACHE = "plan_cache"        # keys: hit / miss
+COUNTER_SERVE_REQUESTS = "serve_requests"  # submitted/admitted/completed/
+                                           # failed/rejected
+COUNTER_SERVE_WAVES = "serve_waves"      # coalesced waves admitted
 
 
 def host_channel_bytes(buffers) -> Dict[int, int]:

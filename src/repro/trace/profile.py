@@ -13,6 +13,14 @@ overridable with the ``REPRO_PROFILE`` environment variable (point it at
 a scratch path in tests/CI).  Writes are atomic (tmp + rename) and the
 per-key sample history is FIFO-bounded, so concurrent benchmark runs
 cannot corrupt it or grow it without bound.
+
+Staleness is bounded by a *code epoch*, not just the FIFO: every sample
+is stamped with :func:`cost_model_epoch` (the planner's
+``COST_MODEL_VERSION``) at record time, queries and ``correction()``
+refits only see current-epoch samples, and recording prunes the rest --
+so bumping the cost model orphans all pre-bump feedback instead of
+letting it steer the new model.  Store files written before epochs
+existed load fine; their unstamped samples are simply ignored.
 """
 from __future__ import annotations
 
@@ -29,6 +37,17 @@ PROFILE_ENV = "REPRO_PROFILE"
 #: Samples kept per (fingerprint, target, signature) key (FIFO).
 MAX_SAMPLES_PER_KEY = 200
 _VERSION = 1
+
+
+def cost_model_epoch() -> str:
+    """The epoch tag stamped on recorded samples: the planner's
+    ``COST_MODEL_VERSION``.  A sample only means "the model was off by
+    r on this machine" for the model that predicted it."""
+    try:
+        from ..memory.dse import COST_MODEL_VERSION  # lazy: no cycle
+    except Exception:  # pragma: no cover - partial installs
+        return "v0"
+    return f"v{COST_MODEL_VERSION}"
 
 
 def default_profile_path() -> str:
@@ -68,9 +87,14 @@ class ProfileStore:
     """
 
     def __init__(self, path: Optional[str] = None,
-                 fingerprint: Optional[str] = None):
+                 fingerprint: Optional[str] = None,
+                 epoch: Optional[str] = None):
         self.path = path or default_profile_path()
         self.fingerprint = fingerprint or machine_fingerprint()
+        #: samples are stamped with this at record time and only
+        #: same-epoch samples feed queries/refits (tests override it to
+        #: simulate a cost-model bump)
+        self.epoch = epoch or cost_model_epoch()
         self.data: Dict[str, Any] = {"version": _VERSION, "entries": {}}
         self._load()
 
@@ -120,10 +144,13 @@ class ProfileStore:
 
     def record(self, target_name: str, signature: str,
                samples: List[Dict[str, Any]], *, save: bool = True) -> int:
-        """Append samples under (this machine, target, signature); FIFO-
-        bounded.  Returns how many were accepted."""
+        """Append samples under (this machine, target, signature),
+        stamped with the current code epoch; FIFO-bounded.  Stale-epoch
+        samples already in the bucket are pruned on the way (the file
+        shrinks back as post-bump feedback arrives).  Returns how many
+        were accepted."""
         good = [
-            s for s in samples
+            dict(s, epoch=self.epoch) for s in samples
             if isinstance(s.get("predicted_s"), (int, float))
             and isinstance(s.get("measured_s"), (int, float))
             and s["predicted_s"] > 0 and s["measured_s"] > 0
@@ -131,7 +158,12 @@ class ProfileStore:
         if not good:
             return 0
         entries = self.data["entries"]
-        bucket = entries.setdefault(self._key(target_name, signature), [])
+        key = self._key(target_name, signature)
+        bucket = [
+            s for s in entries.get(key, ())
+            if isinstance(s, dict) and s.get("epoch") == self.epoch
+        ]
+        entries[key] = bucket
         bucket.extend(good)
         del bucket[:-MAX_SAMPLES_PER_KEY]
         if save:
@@ -165,19 +197,29 @@ class ProfileStore:
     # -- queries ------------------------------------------------------------
     def samples(self, target_name: str,
                 signature: Optional[str] = None) -> List[Dict[str, Any]]:
-        """This machine's samples for a target: exact signature when it
-        has history, otherwise everything recorded for the target (a new
-        plan still benefits from the machine's overall bias)."""
+        """This machine's *current-epoch* samples for a target: exact
+        signature when it has history, otherwise everything recorded for
+        the target (a new plan still benefits from the machine's overall
+        bias).  Samples stamped with another epoch -- or none, from a
+        store file predating epochs -- never surface: the correction
+        refit must not be steered by an obsolete cost model."""
+
+        def live(v) -> List[Dict[str, Any]]:
+            return [
+                s for s in v
+                if isinstance(s, dict) and s.get("epoch") == self.epoch
+            ]
+
         entries = self.data["entries"]
         if signature is not None:
-            exact = entries.get(self._key(target_name, signature))
+            exact = live(entries.get(self._key(target_name, signature), ()))
             if exact:
-                return list(exact)
+                return exact
         prefix = f"{self.fingerprint}/{target_name}/"
         out: List[Dict[str, Any]] = []
         for k, v in sorted(entries.items()):
             if k.startswith(prefix) and isinstance(v, list):
-                out.extend(v)
+                out.extend(live(v))
         return out
 
     def correction(self, target_name: str,

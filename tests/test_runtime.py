@@ -1,5 +1,5 @@
 """Runtime: checkpoint atomicity, data determinism/resume, fault-tolerant
-loop, monitor, serve engine, optimizer."""
+loop, monitor, optimizer."""
 import os
 
 import jax
@@ -14,7 +14,6 @@ from repro.models import build_model
 from repro.optim import AdamWConfig, adamw_init, adamw_update, cosine_schedule
 from repro.runtime.monitor import (StepMonitor, plan_elastic_remesh,
                                    rebalance_batch)
-from repro.runtime.serve import Request, ServeEngine
 from repro.runtime.train import (LoopConfig, TrainLoop, init_train_state,
                                  make_train_step)
 
@@ -202,48 +201,3 @@ def test_elastic_remesh_plan():
     with pytest.raises(ValueError):
         plan_elastic_remesh(8, model_axis=16)
     assert rebalance_batch(256, 15) == 255
-
-
-# -- serve -----------------------------------------------------------------------
-
-def test_serve_engine_greedy_matches_reference():
-    cfg, model = _tiny_model()
-    params = model.init(jax.random.PRNGKey(2))
-    eng = ServeEngine(model, params, slots=2, max_len=32)
-    prompt = np.array([1, 2, 3], np.int32)
-    req = Request(rid=0, prompt=prompt, max_new_tokens=4)
-    eng.submit(req)
-    eng.run_until_drained()
-    assert req.done and len(req.output) == 4
-
-    # reference greedy decode via full forwards
-    toks = list(prompt)
-    want = []
-    for _ in range(4):
-        lg = model.forward(
-            params, {"tokens": jnp.asarray([toks], jnp.int32)}
-        )
-        nxt = int(jnp.argmax(lg[0, -1]))
-        want.append(nxt)
-        toks.append(nxt)
-    assert req.output == want
-
-
-def test_serve_two_requests_isolated():
-    cfg, model = _tiny_model()
-    params = model.init(jax.random.PRNGKey(2))
-    # run the same prompt alone vs alongside another: outputs must match
-    def run(prompts):
-        eng = ServeEngine(model, params, slots=2, max_len=32)
-        reqs = [Request(rid=i, prompt=p, max_new_tokens=3)
-                for i, p in enumerate(prompts)]
-        for r in reqs:
-            eng.submit(r)
-        eng.run_until_drained()
-        return [r.output for r in reqs]
-
-    solo = run([np.array([4, 5, 6], np.int32)])[0]
-    pair = run([
-        np.array([4, 5, 6], np.int32), np.array([9, 8], np.int32)
-    ])[0]
-    assert solo == pair

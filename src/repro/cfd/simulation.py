@@ -298,6 +298,7 @@ def run_chain(
     pipeline_stages: Optional[bool] = None,
     tracer=None,
     monitor=None,
+    metrics=None,
 ) -> ChainResult:
     """Execute a whole multi-operator pipeline off one ChainPlan.
 
@@ -329,7 +330,9 @@ def run_chain(
     from the plan, ready for ``repro.trace.attribution``.  ``monitor``
     (a ``runtime.StepMonitor``) watches per-batch retire times; flagged
     batches are annotated on their sync spans and reported in
-    ``ChainResult.straggler_batches``.  Neither changes results.
+    ``ChainResult.straggler_batches``.  ``metrics`` (a ``repro.metrics``
+    registry) records the driver's always-on per-stage dispatch/stall
+    histograms keyed by the plan signature.  None changes results.
     """
     mesh = mesh or element_mesh()
     if n_eq is None and inputs:
@@ -569,6 +572,8 @@ def run_chain(
         tracer=tracer,
         monitor=monitor,
         stage_names=[s.name for s in chain.stages],
+        metrics=metrics,
+        metrics_labels={"plan": plan.signature[:12]} if metrics else None,
     )
     wall = time.perf_counter() - t0
     if root is not None:

@@ -75,6 +75,10 @@ def _parse_args(argv: Optional[Sequence[str]]) -> argparse.Namespace:
                     "--trace, record the traced run into it; with "
                     "--dse, warm-start the ranking from it; requires "
                     "at least one of the two")
+    ap.add_argument("--metrics", default=None, metavar="OUT.json",
+                    help="meter the executed run (repro.metrics) and "
+                    "write the snapshot JSON (implies --run; validate "
+                    "with python -m repro.metrics)")
     return ap.parse_args(argv)
 
 
@@ -158,16 +162,22 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         print()
         print("dse ranking (top 10):")
         print(format_chain_ranking(system.candidates, limit=10))
-    if args.run or args.trace:
+    if args.run or args.trace or args.metrics:
         tracer = None
         if args.trace:
             from .. import trace as trace_mod
 
             tracer = trace_mod.Tracer()
+        metrics = None
+        if args.metrics:
+            from .. import metrics as metrics_mod
+
+            metrics = metrics_mod.MetricsRegistry()
         res = system.run(
             max_batches=args.max_batches,
             pipeline_stages=False if args.serial_stages else None,
             tracer=tracer,
+            metrics=metrics,
         )
         print()
         print(
@@ -196,4 +206,13 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                 print(
                     f"profile: recorded {got} samples -> {store.path}"
                 )
+        if metrics is not None:
+            from ..metrics import write_snapshot
+
+            snap = write_snapshot(metrics, args.metrics)
+            print()
+            print(
+                f"metrics written to {args.metrics} "
+                f"({len(snap['metrics'])} series)"
+            )
     return 0

@@ -18,7 +18,8 @@ CHARM-style and verifies the winners by measurement.
 """
 from . import chain, channels, dse, layout, pipeline, placement, plan
 from .chain import (ChainPlan, ChainStage, PipelineSpec, ProgramChain,
-                    derive_pipeline, plan_chain)
+                    apply_profile_contention, derive_pipeline,
+                    fit_contention, plan_chain)
 from .channels import (ALVEO_U280, CPU_HOST, TPU_V5E, MemoryTarget,
                        UnknownTargetError, detect_target, resolve_target)
 from .placement import (DeviceTopology, PlacementError, PlacementPlan,
@@ -41,5 +42,6 @@ __all__ = [
     "explore_chain", "fit_correction", "format_chain_ranking",
     "measure_chain_plan",
     "ProgramChain", "ChainStage", "ChainPlan", "plan_chain",
+    "fit_contention", "apply_profile_contention",
     "BufferSpec", "CostBreakdown", "MemoryPlan",
 ]

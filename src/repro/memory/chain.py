@@ -335,7 +335,10 @@ class ChainCost:
     stages are live on different batches simultaneously, so a stage's
     device-side terms (compute, HBM) are time-sliced ``contention``-fold
     -- this is how replication and overlap competing for the same
-    devices is priced *before* execution.
+    devices is priced *before* execution.  When measured per-stage
+    samples exist in a profile store, :func:`fit_contention` replaces
+    the structural count with the multiplier the measurements imply
+    (``contention_fit``) -- the same slot, learned instead of assumed.
     """
 
     stages: Tuple[CostBreakdown, ...]
@@ -347,9 +350,16 @@ class ChainCost:
     n_batches: Optional[int] = None
     #: per-stage device-sharing multiplier (empty = disjoint groups)
     contention: Tuple[int, ...] = ()
+    #: per-stage contention *measured* on this machine, fitted from
+    #: profile-store stage samples by :func:`fit_contention` (0.0 =
+    #: no device-bound evidence for that stage; fall back to the
+    #: structural ``contention`` count).  Empty = no profile consulted.
+    contention_fit: Tuple[float, ...] = ()
 
-    def _contention(self, i: int) -> int:
-        return self.contention[i] if self.contention else 1
+    def _contention(self, i: int) -> float:
+        if self.contention_fit and self.contention_fit[i] > 0.0:
+            return self.contention_fit[i]
+        return float(self.contention[i]) if self.contention else 1.0
 
     @property
     def t_serial(self) -> float:
@@ -430,6 +440,87 @@ class ChainCost:
             self.t_back_to_back / self.t_overlapped
             if self.t_overlapped else 1.0
         )
+
+
+def fit_contention(
+    cost: ChainCost,
+    stage_names: Sequence[str],
+    samples: Sequence[Dict[str, float]],
+) -> Tuple[float, ...]:
+    """Per-stage contention multipliers fitted from measured samples.
+
+    The steady-state model prices stage i as
+    ``max(t_host, k * max(t_compute, t_hbm)) + t_overhead`` with ``k``
+    the *structural* device-sharing count from the placement.  Each
+    profile-store sample with ``scope == "stage:<name>"`` carries that
+    stage's measured per-batch time, so the model inverts directly:
+    ``k_est = (measured - t_overhead) / max(t_compute, t_hbm)``.  Only
+    samples with device-bound evidence count -- when
+    ``measured - t_overhead <= t_host`` the host link hides the device
+    terms and the measurement says nothing about ``k``.  Per stage the
+    estimates combine by geometric mean (ratios), clamped to >= 1.0
+    (devices cannot be less than uncontended).  Stages without usable
+    samples get 0.0, meaning "keep the structural count".  Returns ()
+    when no stage could be fitted, so callers can skip the replace.
+    """
+    n = len(cost.stages)
+    if len(stage_names) != n:
+        raise ValueError(
+            f"cost has {n} stages, got {len(stage_names)} names"
+        )
+    by_stage: Dict[str, List[float]] = {}
+    for s in samples:
+        scope = s.get("scope", "")
+        m = s.get("measured_s")
+        if not isinstance(scope, str) or not scope.startswith("stage:"):
+            continue
+        if not isinstance(m, (int, float)) or m <= 0:
+            continue
+        by_stage.setdefault(scope[len("stage:"):], []).append(float(m))
+
+    fit: List[float] = []
+    for i, nm in enumerate(stage_names):
+        c = cost.stages[i]
+        dev = max(c.t_compute, c.t_hbm)
+        ks: List[float] = []
+        if dev > 0:
+            for m in by_stage.get(nm, ()):
+                dev_part = m - c.t_overhead
+                if dev_part <= c.t_host:
+                    continue        # host-bound sample: no evidence on k
+                ks.append(dev_part / dev)
+        if ks:
+            k = math.exp(sum(math.log(x) for x in ks) / len(ks))
+            fit.append(max(1.0, k))
+        else:
+            fit.append(0.0)
+    return tuple(fit) if any(k > 0.0 for k in fit) else ()
+
+
+def apply_profile_contention(plan: "ChainPlan", profile) -> "ChainPlan":
+    """Re-price a plan's steady-state times from measured contention.
+
+    ``profile`` is anything :meth:`repro.trace.ProfileStore.open`
+    accepts (a store, a path, ``True`` for the default location).  Pulls
+    this machine's current-epoch stage samples for the plan's signature
+    (target-wide fallback) and swaps the fitted multipliers into the
+    plan's :class:`ChainCost`.  A cold store -- or one with only
+    host-bound / chain-level samples -- returns the plan unchanged.
+    """
+    from ..trace.profile import ProfileStore  # lazy: no import cycle
+
+    store = ProfileStore.open(profile)
+    if store is None:
+        return plan
+    samples = store.samples(plan.target.name, plan.signature)
+    fit = fit_contention(
+        plan.cost, [sp.name for sp in plan.stages], samples
+    )
+    if not fit:
+        return plan
+    return dataclasses.replace(
+        plan, cost=dataclasses.replace(plan.cost, contention_fit=fit)
+    )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -562,6 +653,14 @@ class ChainPlan:
         cc = self.cost
         lines.append("")
         lines += self.placement.describe()
+        if cc.contention_fit:
+            vec = ",".join(
+                f"{k:.2f}" if k > 0.0 else "-" for k in cc.contention_fit
+            )
+            lines.append(
+                f"  contention fitted from profile: [{vec}]   "
+                "(- = no device-bound samples; structural count kept)"
+            )
         if self.pipeline is not None:
             pp = self.pipeline
             lines.append(
@@ -600,6 +699,7 @@ def plan_chain(
     placement: Optional[PlacementPlan] = None,
     n_eq: Optional[int] = None,
     channel_bytes: Optional[int] = None,
+    profile=None,
     _sched_cache: Optional[Dict[Tuple[int, int], Schedule]] = None,
 ) -> ChainPlan:
     """Plan one memory architecture for a whole ProgramChain.
@@ -617,9 +717,12 @@ def plan_chain(
     enough devices for the widest stage, so element sharding and the
     pipeline's dispatch rings visibly compete for them); pass a larger
     ``topology`` -- or a full ``placement`` -- to plan disjoint device
-    groups.  Deterministic: same arguments, same plan.  ``_sched_cache``
-    (keyed by stage index and scalar width) lets sweeps reuse
-    staged-backend schedules across design points instead of
+    groups.  Deterministic: same arguments, same plan.  ``profile``
+    (anything :meth:`repro.trace.ProfileStore.open` accepts) re-prices
+    the finished plan's steady-state times from this machine's measured
+    per-stage contention via :func:`apply_profile_contention`.
+    ``_sched_cache`` (keyed by stage index and scalar width) lets sweeps
+    reuse staged-backend schedules across design points instead of
     re-partitioning per candidate.
     """
     # local import: dse depends on this module for chain exploration
@@ -862,4 +965,6 @@ def plan_chain(
         plan = dataclasses.replace(
             plan, feasible=False, infeasible_reason=reason
         )
+    if profile is not None:
+        plan = apply_profile_contention(plan, profile)
     return plan

@@ -207,6 +207,8 @@ def run_stage_pipelined(
     tracer=None,
     monitor=None,
     stage_names: Optional[Sequence[str]] = None,
+    metrics=None,
+    metrics_labels: Optional[Dict[str, str]] = None,
 ) -> List[Any]:
     """Run every batch through a chain of stages, cross-batch pipelined.
 
@@ -246,11 +248,18 @@ def run_stage_pipelined(
     batch retirements; flagged steps annotate the retire's sync span
     with ``straggler=True``.  Both only observe -- per-batch results are
     identical with or without them.
+
+    ``metrics`` (a ``repro.metrics`` registry; None/NULL = off) records
+    per-stage dispatch/handoff time histograms, stall counters, and a
+    tick histogram, labeled with ``metrics_labels`` (the serve engine
+    passes the plan signature) -- always-on telemetry next to the
+    tracer's bounded spans.  Observation only, like the tracer.
     """
     driver = StagePipelineDriver(
         stage_fns, stage_fn=stage_fn, depths=depths, reduce_fn=reduce_fn,
         defer_sync=defer_sync, place_fns=place_fns, tracer=tracer,
         monitor=monitor, stage_names=stage_names,
+        metrics=metrics, metrics_labels=metrics_labels,
     )
     it = iter(batches)
     while True:
@@ -311,6 +320,8 @@ class StagePipelineDriver:
         monitor=None,
         stage_names: Optional[Sequence[str]] = None,
         capture_errors: bool = False,
+        metrics=None,
+        metrics_labels: Optional[Dict[str, str]] = None,
     ) -> None:
         stage_fns = list(stage_fns)
         n_stages = len(stage_fns)
@@ -354,6 +365,42 @@ class StagePipelineDriver:
         self.monitor = monitor
         self.names = names
         self.capture_errors = capture_errors
+        # -- always-on metrics (duck-typed like the tracer: this module
+        # never imports repro.metrics; any registry-shaped object works,
+        # and a falsy one -- None or NULL_REGISTRY -- costs one check
+        # here and nothing per tick) ----------------------------------------
+        self._m_tick = self._m_dispatch = self._m_handoff = None
+        self._m_stall = None
+        if metrics:
+            lab = dict(metrics_labels or {})
+            self._m_tick = metrics.histogram(
+                "pipeline_tick_seconds",
+                "One driver tick: enter/dispatch-all-stages/retire.", **lab)
+            self._m_dispatch = [
+                metrics.histogram(
+                    "pipeline_stage_dispatch_seconds",
+                    "One (stage, batch) dispatch slot, handoff included.",
+                    stage=nm, **lab)
+                for nm in names
+            ]
+            self._m_handoff = [
+                metrics.histogram(
+                    "pipeline_stage_handoff_seconds",
+                    "Cross-group reshard of the HBM-resident handoff.",
+                    stage=nm, **lab)
+                for nm in names
+            ]
+            self._m_stall = [
+                {
+                    reason: metrics.counter(
+                        "pipeline_stall_total",
+                        "Skipped stage dispatches by cause: ring skew "
+                        "not yet satisfied, or producer stage behind.",
+                        stage=nm, reason=reason, **lab)
+                    for reason in ("skew", "producer")
+                }
+                for nm in names
+            ]
         # -- ring state ------------------------------------------------------
         self._staged: deque = deque()       # staged, not yet entered
         #: batch k -> [staged, carry]; held from entry until retire (the
@@ -420,6 +467,7 @@ class StagePipelineDriver:
         one finished batch.  Returns False once nothing progressed (ring
         dry -- feed more or stop)."""
         tracer = self.tracer
+        tick_t0 = time.perf_counter() if self._m_tick is not None else 0.0
         progressed = False
         if self._staged:
             k = self._entered
@@ -437,8 +485,12 @@ class StagePipelineDriver:
             if k not in self._records or k >= self._entered:
                 continue
             if t - self._entry_tick[k] < self.skews[i]:
+                if self._m_stall is not None:
+                    self._m_stall[i]["skew"].inc()
                 continue  # ring depth: stage i lags entry by skews[i]
             if i > 0 and self._done[i - 1] <= k:
+                if self._m_stall is not None:
+                    self._m_stall[i]["producer"].inc()
                 continue  # producer stage hasn't finished this batch
             self._done[i] = k + 1
             progressed = True
@@ -448,14 +500,21 @@ class StagePipelineDriver:
             slot = (tracer.begin(f"b{k}", _CAT_SLOT, 1 + i,
                                  stage=i, batch=k, tick=t)
                     if tracer else None)
+            slot_t0 = (time.perf_counter()
+                       if self._m_dispatch is not None else 0.0)
             try:
                 if self.place_fns is not None and self.place_fns[i] is not None:
+                    hand_t0 = (time.perf_counter()
+                               if self._m_handoff is not None else 0.0)
                     if tracer:
                         with tracer.span(f"reshard b{k}", _CAT_HANDOFF,
                                          1 + i, stage=i, batch=k):
                             rec[0], rec[1] = self.place_fns[i](rec[0], rec[1])
                     else:
                         rec[0], rec[1] = self.place_fns[i](rec[0], rec[1])
+                    if self._m_handoff is not None:
+                        self._m_handoff[i].observe(
+                            time.perf_counter() - hand_t0)
                 if tracer:
                     with tracer.span(self.names[i], _CAT_DISPATCH, 1 + i,
                                      stage=i, batch=k):
@@ -466,6 +525,8 @@ class StagePipelineDriver:
                 if not self.capture_errors:
                     raise
                 rec[1] = _Poison(e)
+            if self._m_dispatch is not None:
+                self._m_dispatch[i].observe(time.perf_counter() - slot_t0)
             if slot is not None:
                 tracer.end(slot)
         k = self._retire_next
@@ -479,6 +540,8 @@ class StagePipelineDriver:
             while self._pending:
                 self._flush_one()
         self._t += 1
+        if self._m_tick is not None:
+            self._m_tick.observe(time.perf_counter() - tick_t0)
         return progressed
 
     # -- retire / sync -------------------------------------------------------

@@ -9,13 +9,16 @@ evict the host / trigger elastic re-meshing (``plan_elastic_remesh``).
 :class:`RequestLatency` is the serving-side sibling: per-request
 submit-to-complete latency, summarized over a bounded recent window so a
 long-lived ``repro.serve`` engine can report p50/p95 without unbounded
-history.
+history.  Both delegate their distribution bookkeeping to
+:class:`repro.metrics.Histogram` -- one quantile implementation in the
+codebase, shared with the always-on metrics layer.
 """
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
 from typing import Dict, List, Optional, Tuple
+
+from ..metrics import Histogram
 
 
 @dataclasses.dataclass
@@ -32,9 +35,13 @@ class StepMonitor:
         self.ewma: Optional[float] = None
         self.count = 0
         self.flags: List[int] = []
+        #: every recorded step time (warmup included) -- the flag-stat
+        #: summary and any external scrape read quantiles off this
+        self.steps = Histogram(name="step_seconds")
 
     def record(self, dt: float) -> bool:
         self.count += 1
+        self.steps.observe(dt)
         if self.count <= self.warmup:
             return False
         if self.ewma is None:
@@ -47,6 +54,19 @@ class StepMonitor:
             self.flags.append(self.count)
         return flagged
 
+    def summary(self) -> Dict[str, float]:
+        """Step-time distribution plus flag stats, histogram-backed."""
+        s = self.steps.summary()
+        return {
+            "count": float(self.count),
+            "mean_s": s.get("mean", 0.0),
+            "p50_s": s.get("p50", 0.0),
+            "p95_s": s.get("p95", 0.0),
+            "max_s": s.get("max", 0.0),
+            "flagged": float(len(self.flags)),
+            "flag_rate": len(self.flags) / self.count if self.count else 0.0,
+        }
+
 
 @dataclasses.dataclass
 class RequestLatency:
@@ -54,29 +74,37 @@ class RequestLatency:
 
     Exact count/mean/max over the whole run; percentiles over the most
     recent ``window`` requests (a serving engine outlives any full-
-    history quantile structure worth carrying here).
+    history quantile structure worth carrying here).  A thin facade over
+    :class:`repro.metrics.Histogram` -- same counts, same window, same
+    nearest-rank quantile -- kept for its serving-flavored ``summary()``
+    keys and so callers need no registry.
     """
 
     window: int = 1024
 
     def __post_init__(self) -> None:
-        self.count = 0
-        self.total_s = 0.0
-        self.max_s = 0.0
-        self._recent: deque = deque(maxlen=self.window)
+        self._hist = Histogram(
+            name="request_latency_seconds", window=self.window
+        )
 
     def record(self, latency_s: float) -> None:
-        self.count += 1
-        self.total_s += latency_s
-        self.max_s = max(self.max_s, latency_s)
-        self._recent.append(latency_s)
+        self._hist.observe(latency_s)
+
+    @property
+    def count(self) -> int:
+        return self._hist.count
+
+    @property
+    def total_s(self) -> float:
+        return self._hist.sum
+
+    @property
+    def max_s(self) -> float:
+        return self._hist.max if self._hist.count else 0.0
 
     def quantile(self, q: float) -> float:
         """q-quantile (nearest-rank) over the recent window; 0 if empty."""
-        if not self._recent:
-            return 0.0
-        xs = sorted(self._recent)
-        return xs[min(len(xs) - 1, int(q * len(xs)))]
+        return self._hist.quantile(q)
 
     def summary(self) -> Dict[str, float]:
         return {

@@ -16,6 +16,7 @@ Hit/miss counts export through the standard counter machinery
 """
 from __future__ import annotations
 
+import time
 from typing import Dict, Optional
 
 from ..flow import build
@@ -26,10 +27,13 @@ class PlanCache:
 
     ``max_systems`` FIFO-bounds the cache (a CompiledSystem holds jitted
     stage callables; a long-lived server should not grow one per novel
-    program without bound).
+    program without bound).  ``metrics`` (a ``repro.metrics`` registry)
+    adds hit/miss counters and a compile-seconds histogram on top of the
+    tracer's ``COUNTER_PLAN_CACHE``.
     """
 
-    def __init__(self, tracer=None, max_systems: int = 64) -> None:
+    def __init__(self, tracer=None, max_systems: int = 64,
+                 metrics=None) -> None:
         if max_systems < 1:
             raise ValueError(f"max_systems must be >= 1, got {max_systems}")
         self.tracer = tracer
@@ -37,6 +41,18 @@ class PlanCache:
         self._systems: Dict[str, build.CompiledSystem] = {}
         self.hits = 0
         self.misses = 0
+        self._m_events = self._m_compile = None
+        if metrics:
+            self._m_events = {
+                event: metrics.counter(
+                    "plan_cache_total",
+                    "Compile calls served from cache (hit) vs compiled "
+                    "fresh (miss).", event=event)
+                for event in ("hit", "miss")
+            }
+            self._m_compile = metrics.histogram(
+                "plan_cache_compile_seconds",
+                "Wall seconds per cache-miss flow compile.")
 
     def key(self, source: str, **compile_kwargs) -> str:
         return build.cache_key(source, **compile_kwargs)
@@ -63,13 +79,18 @@ class PlanCache:
             return system
         self.misses += 1
         self._bump("miss")
+        t0 = time.perf_counter()
         system = build.compile(source, **compile_kwargs)
+        if self._m_compile is not None:
+            self._m_compile.observe(time.perf_counter() - t0)
         self._systems[key] = system
         while len(self._systems) > self.max_systems:
             self._systems.pop(next(iter(self._systems)))
         return system
 
     def _bump(self, what: str) -> None:
+        if self._m_events is not None:
+            self._m_events[what].inc()
         if self.tracer:
             from ..trace.attribution import COUNTER_PLAN_CACHE
 

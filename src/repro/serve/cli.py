@@ -59,6 +59,15 @@ def _parse_args(argv: Optional[Sequence[str]]) -> argparse.Namespace:
                     "to per-request serial runs (exit 1 on mismatch)")
     ap.add_argument("--trace", default=None, metavar="OUT.json",
                     help="write a Chrome-trace JSON of the served run")
+    ap.add_argument("--metrics", default=None, metavar="OUT.json",
+                    help="meter the run (repro.metrics registry) and "
+                    "write the snapshot JSON, SLO verdict included "
+                    "(validate with python -m repro.metrics --check)")
+    ap.add_argument("--slo-p95-s", type=float, default=5.0,
+                    help="SLO: target p95 request latency in seconds "
+                    "(default 5.0; used with --metrics)")
+    ap.add_argument("--slo-error-rate", type=float, default=0.01,
+                    help="SLO: request error-rate budget (default 0.01)")
     return ap.parse_args(argv)
 
 
@@ -111,7 +120,16 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
 
         tracer = trace_mod.Tracer()
 
-    cache = PlanCache(tracer=tracer)
+    metrics = slo = None
+    if args.metrics:
+        from .. import metrics as metrics_mod
+
+        metrics = metrics_mod.MetricsRegistry()
+        slo = metrics_mod.SLOTracker(
+            args.slo_p95_s, args.slo_error_rate, registry=metrics
+        )
+
+    cache = PlanCache(tracer=tracer, metrics=metrics)
     kwargs = dict(
         name=prog_name,
         element_vars=element_vars,
@@ -151,6 +169,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     engine = ServeEngine(
         system, window=args.window, max_wait_s=args.max_wait_s,
         tracer=tracer, latency=latency, seed=args.seed,
+        metrics=metrics, slo=slo,
     )
     request_inputs = _synth_requests(engine, args.requests, args.seed)
     served = [engine.submit(inp) for inp in request_inputs]
@@ -174,6 +193,15 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         f"p95 {lat['p95_s'] * 1e3:.3f} ms   "
         f"max {lat['max_s'] * 1e3:.3f} ms"
     )
+    if slo is not None:
+        v = slo.verdict()
+        print(
+            f"slo: verdict={v['verdict']} "
+            f"p95 {v['p95_s'] * 1e3:.3f} ms "
+            f"(target {v['target_p95_s'] * 1e3:.0f} ms)   "
+            f"latency_burn {v['latency_burn']:.2f}   "
+            f"error_burn {v['error_burn']:.2f}"
+        )
 
     ok = True
     if args.smoke:
@@ -208,4 +236,14 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
             tracer, args.trace, metadata={"source": prog_name}
         )
         print(f"trace written to {args.trace}")
+    if metrics is not None:
+        from ..metrics import write_snapshot
+
+        snap = write_snapshot(
+            metrics, args.metrics, extra={"slo": slo.verdict()}
+        )
+        print(
+            f"metrics written to {args.metrics} "
+            f"({len(snap['metrics'])} series)"
+        )
     return 0 if ok else 1

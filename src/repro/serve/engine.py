@@ -79,13 +79,23 @@ class ServeEngine:
     and the serving counters; ``monitor``/``latency`` observe retire
     cadence and request latency.  ``seed`` fixes the synthesized
     batch-invariant shared operands (pass ``shared`` to pin them).
+
+    ``metrics`` (a :class:`repro.metrics.MetricsRegistry`; None or
+    :data:`~repro.metrics.NULL_REGISTRY` = off) turns on the always-on
+    telemetry: request lifecycle counters, in-flight/queue gauges, and
+    per-request latency *decomposed* into queue-wait (submit to first
+    wave fed) vs wave-execution (first feed to retire), with the
+    execution share attributable to zero-padding tracked separately.
+    ``slo`` (a :class:`repro.metrics.SLOTracker`) is fed every finished
+    request.  Both only observe -- outputs stay bitwise-identical to an
+    unmetered engine.
     """
 
     def __init__(self, system, *, window: Optional[int] = None,
                  reject: bool = False, max_wait_s: Optional[float] = None,
                  tracer=None, monitor=None, latency=None, seed: int = 0,
                  shared: Optional[Dict[str, np.ndarray]] = None,
-                 clock=time.monotonic) -> None:
+                 clock=time.monotonic, metrics=None, slo=None) -> None:
         from ..cfd.simulation import element_mesh  # lazy: cfd builds on flow
 
         self.system = system
@@ -95,8 +105,59 @@ class ServeEngine:
         self.plan = plan
         self.tracer = tracer
         self.latency = latency
+        self.metrics = metrics
+        self.slo = slo
         E = plan.batch_elements
         self.batch_elements = E
+        self._m_req = self._m_lat = self._m_pad = None
+        self._m_waves = self._m_ticks = self._m_admitted_elems = None
+        self._m_pad_overhead = None
+        self._g_inflight_req = self._g_inflight_waves = None
+        if metrics:
+            self._m_req = {
+                e: metrics.counter(
+                    "serve_requests_total",
+                    "Requests by lifecycle event (admitted counts "
+                    "requests whose last slice entered a wave).",
+                    event=e)
+                for e in ("submitted", "admitted", "completed",
+                          "failed", "rejected")
+            }
+            self._m_waves = metrics.counter(
+                "serve_waves_total", "Coalesced E-element waves fed.")
+            self._m_ticks = metrics.counter(
+                "serve_ticks_total", "Ring ticks driven by the engine.")
+            self._m_admitted_elems = metrics.counter(
+                "serve_admitted_elements_total",
+                "Real (non-pad) element rows fed across all waves.")
+            self._m_pad = {
+                kind: metrics.counter(
+                    "serve_pad_elements_total",
+                    "Zero-pad rows fed: wave = undersized admission "
+                    "waves, plan = the plan's own E block padding.",
+                    kind=kind)
+                for kind in ("wave", "plan")
+            }
+            metrics.gauge(
+                "serve_batch_elements",
+                "The plan's wave size E in element rows.").set(float(E))
+            self._g_inflight_req = metrics.gauge(
+                "serve_in_flight_requests",
+                "Submitted requests not yet finished.")
+            self._g_inflight_waves = metrics.gauge(
+                "serve_in_flight_waves", "Waves currently in the ring.")
+            self._m_lat = {
+                phase: metrics.histogram(
+                    "serve_request_latency_seconds",
+                    "Per-request latency, decomposed: total = queue "
+                    "(submit to first feed) + execute (first feed to "
+                    "retire).", phase=phase)
+                for phase in ("total", "queue", "execute")
+            }
+            self._m_pad_overhead = metrics.histogram(
+                "serve_request_pad_overhead_seconds",
+                "Execution time attributable to wave zero-padding: each "
+                "of a request's waves charges pad/E of its wall time.")
 
         pipe = plan.pipeline
         if pipe is None:  # legacy plan: derive from the stage Ks
@@ -203,9 +264,13 @@ class ServeEngine:
             monitor=monitor,
             stage_names=[s.name for s in chain.stages],
             capture_errors=True,
+            metrics=metrics,
+            metrics_labels={"plan": plan.signature[:12]},
         )
 
-        self.queue = AdmissionQueue(E, max_wait_s=max_wait_s, clock=clock)
+        self.queue = AdmissionQueue(E, max_wait_s=max_wait_s, clock=clock,
+                                    metrics=metrics)
+        #: batch index -> (wave parts, feed timestamp, wave pad rows)
         self._wave_parts: Dict[int, tuple] = {}
         self._spans: Dict[int, Any] = {}
         self._request_track = 1 + len(chain.stages)
@@ -254,6 +319,8 @@ class ServeEngine:
         self.queue.push(req)
         self.stats["submitted"] += 1
         self._bump_requests("submitted")
+        if self._g_inflight_req is not None:
+            self._g_inflight_req.inc()
         if self.tracer:
             from ..trace.attribution import CAT_REQUEST
 
@@ -316,6 +383,9 @@ class ServeEngine:
             self._finish(r)
         self._wave_parts.clear()
         self.queue._q.clear()
+        self.queue._gauge_depth()
+        if self._g_inflight_waves is not None:
+            self._g_inflight_waves.set(0.0)
         self.driver.close()
         self._closed = True
         return leftovers
@@ -323,7 +393,7 @@ class ServeEngine:
     # -- internals -----------------------------------------------------------
     def _live_requests(self) -> List[ServeRequest]:
         seen: Dict[int, ServeRequest] = {}
-        for parts in self._wave_parts.values():
+        for parts, _, _ in self._wave_parts.values():
             for part in parts:
                 seen.setdefault(part.request.rid, part.request)
         for r in self.queue.pending_requests:
@@ -360,14 +430,26 @@ class ServeEngine:
         for part in wave.parts:
             for q, arr in part.request.inputs.items():
                 batch[q][part.dst:part.dst + part.n] = arr[part.lo:part.hi]
+        feed_t = self.queue.clock()
+        for part in wave.parts:
+            if part.request.admitted_s == 0.0:
+                part.request.admitted_s = feed_t
         k = self.driver.feed(batch)
-        self._wave_parts[k] = wave.parts
+        self._wave_parts[k] = (wave.parts, feed_t, wave.pad_elements)
         self.stats["waves"] += 1
         self.stats["pad_elements"] += wave.pad_elements
         self.stats["plan_pad_elements"] += self.plan.batch_pad_elements
         fully_admitted = sum(
             1 for p in wave.parts if p.hi == p.request.n_elements
         )
+        if self._m_waves is not None:
+            self._m_waves.inc()
+            self._m_admitted_elems.inc(float(E - wave.pad_elements))
+            if wave.pad_elements:
+                self._m_pad["wave"].inc(float(wave.pad_elements))
+            if self.plan.batch_pad_elements:
+                self._m_pad["plan"].inc(float(self.plan.batch_pad_elements))
+            self._g_inflight_waves.set(float(len(self._wave_parts)))
         if self.tracer:
             from ..trace.attribution import (COUNTER_PAD_ELEMENTS,
                                              COUNTER_SERVE_WAVES)
@@ -377,17 +459,29 @@ class ServeEngine:
                 self.tracer.bump(COUNTER_PAD_ELEMENTS, {
                     "wave": float(wave.pad_elements)
                 })
-            if fully_admitted:
-                self._bump_requests("admitted", float(fully_admitted))
+        if fully_admitted:
+            self._bump_requests("admitted", float(fully_admitted))
 
     def _tick(self) -> None:
         self.driver.tick()
         self.stats["ticks"] += 1
+        if self._m_ticks is not None:
+            self._m_ticks.inc()
         self._collect()
 
     def _collect(self) -> None:
+        retired = False
         for k, value in self.driver.take():
-            parts = self._wave_parts.pop(k)
+            retired = True
+            parts, feed_t, pad = self._wave_parts.pop(k)
+            if pad:
+                # charge each rider its share of the wave's wall time
+                # spent computing zero rows: pad/E of (feed -> retire)
+                wave_wall = self.queue.clock() - feed_t
+                for part in parts:
+                    part.request.pad_overhead_s += (
+                        wave_wall * pad / self.batch_elements
+                    )
             failed = isinstance(value, BaseException)
             for part in parts:
                 req = part.request
@@ -409,17 +503,32 @@ class ServeEngine:
                 req.parts_done += 1
                 if req.done:
                     self._finish(req)
+        if retired and self._g_inflight_waves is not None:
+            self._g_inflight_waves.set(float(len(self._wave_parts)))
 
     def _finish(self, req: ServeRequest, *, count: bool = True) -> None:
         if req.completed_s:
             return
         req.completed_s = self.queue.clock()
+        total_s = req.completed_s - req.submitted_s
         if self.latency is not None and req.error is None:
-            self.latency.record(req.completed_s - req.submitted_s)
+            self.latency.record(total_s)
+        if self.slo is not None and count:
+            self.slo.observe(total_s, error=req.error is not None)
+        if self._m_lat is not None and count and req.error is None:
+            # decomposition: total == queue + execute by construction
+            # (admitted_s sits between submit and complete)
+            admitted = req.admitted_s or req.completed_s
+            self._m_lat["queue"].observe(admitted - req.submitted_s)
+            self._m_lat["execute"].observe(req.completed_s - admitted)
+            self._m_lat["total"].observe(total_s)
+            self._m_pad_overhead.observe(req.pad_overhead_s)
         if count:
             what = "failed" if req.error is not None else "completed"
             self.stats[what] += 1
             self._bump_requests(what)
+        if self._g_inflight_req is not None:
+            self._g_inflight_req.dec()
         sp = self._spans.pop(req.rid, None)
         if sp is not None:
             if req.error is not None:
@@ -427,6 +536,8 @@ class ServeEngine:
             self.tracer.end(sp)
 
     def _bump_requests(self, what: str, n: float = 1.0) -> None:
+        if self._m_req is not None:
+            self._m_req[what].inc(n)
         if self.tracer:
             from ..trace.attribution import COUNTER_SERVE_REQUESTS
 

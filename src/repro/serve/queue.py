@@ -39,7 +39,13 @@ class ServeRequest:
     inputs: Dict[str, np.ndarray]
     n_elements: int
     submitted_s: float = 0.0
+    #: when the request's first slice was fed to the ring -- the
+    #: queue-wait / wave-execution boundary of the latency decomposition
+    admitted_s: float = 0.0
     completed_s: float = 0.0
+    #: execution time attributable to wave zero-padding: each of the
+    #: request's waves charges pad/E of its wall time here
+    pad_overhead_s: float = 0.0
     outputs: Optional[Dict[str, np.ndarray]] = None
     error: Optional[BaseException] = None
     #: wave-slices this request was split into / already retired
@@ -82,11 +88,16 @@ class AdmissionQueue:
     """FIFO element coalescer over :class:`ServeRequest`.
 
     ``clock`` is injectable for tests (defaults to ``time.monotonic``).
+    ``metrics`` (a ``repro.metrics`` registry; None/NULL = off) records
+    queue-depth gauges, wave size/fill-ratio/wait-age histograms, and a
+    per-reason flush counter -- every wave is credited to exactly one of
+    ``full`` (E pending), ``max_wait`` (latency knob expired), or
+    ``force`` (drain/shutdown).
     """
 
     def __init__(self, batch_elements: int, *,
                  max_wait_s: Optional[float] = None,
-                 clock=time.monotonic) -> None:
+                 clock=time.monotonic, metrics=None) -> None:
         if batch_elements < 1:
             raise ValueError(
                 f"batch_elements must be >= 1, got {batch_elements}"
@@ -96,10 +107,48 @@ class AdmissionQueue:
         self.clock = clock
         #: (request, next element offset) cursors, FIFO
         self._q: deque = deque()
+        self._m = None
+        if metrics:
+            from ..metrics import linear_buckets
+
+            E = batch_elements
+            self._m = {
+                "depth_requests": metrics.gauge(
+                    "admission_queue_depth_requests",
+                    "Requests with unadmitted elements still queued."),
+                "depth_elements": metrics.gauge(
+                    "admission_queue_depth_elements",
+                    "Element rows pending admission."),
+                "wave_size": metrics.histogram(
+                    "admission_wave_size_elements",
+                    "Real (non-pad) element rows per admitted wave.",
+                    buckets=linear_buckets(0, E, min(E, 16))),
+                "fill": metrics.histogram(
+                    "admission_wave_fill_ratio",
+                    "Wave fill: real rows / E (1.0 = no padding).",
+                    buckets=linear_buckets(0.0, 1.0, 10)),
+                "wait": metrics.histogram(
+                    "admission_wait_age_seconds",
+                    "Age of the oldest queued request at wave admission."),
+                "flush": {
+                    reason: metrics.counter(
+                        "admission_flush_total",
+                        "Admitted waves by trigger: full E pending, "
+                        "max_wait_s expiry, or forced (drain/shutdown).",
+                        reason=reason)
+                    for reason in ("full", "max_wait", "force")
+                },
+            }
+
+    def _gauge_depth(self) -> None:
+        if self._m is not None:
+            self._m["depth_requests"].set(float(len(self._q)))
+            self._m["depth_elements"].set(float(self.pending_elements))
 
     def push(self, req: ServeRequest) -> None:
         req.submitted_s = self.clock()
         self._q.append([req, 0])
+        self._gauge_depth()
 
     def remove(self, req: ServeRequest) -> bool:
         """Drop a request that has not been (partially) admitted yet --
@@ -109,6 +158,7 @@ class AdmissionQueue:
                 if entry[1] != 0:
                     return False
                 self._q.remove(entry)
+                self._gauge_depth()
                 return True
         return False
 
@@ -143,6 +193,14 @@ class AdmissionQueue:
         if not self.ready(force=force):
             return None
         E = self.batch_elements
+        reason, age = "force", 0.0
+        if self._m is not None:
+            age = self.clock() - self._q[0][0].submitted_s
+            if self.pending_elements >= E:
+                reason = "full"
+            elif (self.max_wait_s is not None
+                  and age >= self.max_wait_s):
+                reason = "max_wait"
         parts: List[WavePart] = []
         dst = 0
         while self._q and dst < E:
@@ -155,4 +213,10 @@ class AdmissionQueue:
                 self._q.popleft()
             else:
                 self._q[0][1] = off + take
+        if self._m is not None:
+            self._m["wave_size"].observe(float(dst))
+            self._m["fill"].observe(dst / E)
+            self._m["wait"].observe(age)
+            self._m["flush"][reason].inc()
+            self._gauge_depth()
         return Wave(parts=tuple(parts), pad_elements=E - dst)

@@ -13,8 +13,8 @@ This package never imports ``repro.memory`` at module level -- the
 executors it instruments depend on staying import-light.
 """
 from .attribution import (Attribution, StageAttribution, attribute,
-                          attribution_report, host_channel_bytes,
-                          samples_from_trace)
+                          attribution_report, chrome_counter_totals,
+                          host_channel_bytes, samples_from_trace)
 from .chrome import to_chrome, write_chrome
 from .profile import (PROFILE_ENV, ProfileStore, default_profile_path,
                       machine_fingerprint)
@@ -37,6 +37,7 @@ __all__ = [
     "assert_valid",
     "attribute",
     "attribution_report",
+    "chrome_counter_totals",
     "default_profile_path",
     "host_channel_bytes",
     "machine_fingerprint",

@@ -261,6 +261,24 @@ def attribution_report(
     return "\n".join(lines)
 
 
+def chrome_counter_totals(
+    trace: Dict[str, Any]
+) -> Dict[str, Dict[str, float]]:
+    """Final cumulative counter totals from an exported Chrome-trace
+    document.  ``Tracer.bump`` counters export as ``ph: "C"`` events
+    each carrying the *running* totals, so the last event per counter
+    name is the run's sum -- the totals ``repro.metrics`` reconciles
+    its own counters against (``python -m repro.metrics --check
+    --trace``)."""
+    totals: Dict[str, Dict[str, float]] = {}
+    for ev in trace.get("traceEvents", []):
+        if ev.get("ph") == "C":
+            totals[ev["name"]] = {
+                str(k): float(v) for k, v in ev.get("args", {}).items()
+            }
+    return totals
+
+
 def samples_from_trace(tracer: Tracer, plan) -> List[Dict[str, Any]]:
     """Per-term (predicted, measured) pairs a profile store learns from:
     one sample per stage with measured slot time, attributed to the

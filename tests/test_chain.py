@@ -482,3 +482,98 @@ def test_layout_vmem_block_matches_kernel_formula():
             assert layout.block_working_set_bytes(
                 prog, be, bytes_per_scalar=4
             ) == hops.block_working_set_bytes(p, be)
+
+
+# ---------------------------------------------------------------------------
+# measured contention: profile-store stage samples re-price steady state
+# ---------------------------------------------------------------------------
+
+def test_contention_fit_round_trip(cfd_chain, tmp_path):
+    """Record synthetic per-stage measurements into a ProfileStore, plan
+    with profile=, and the fitted multipliers invert the steady-state
+    model exactly: max(t_host, k*dev) + t_overhead == measured."""
+    from repro.trace.profile import ProfileStore
+
+    kw = dict(target=channels.ALVEO_U280, batch_elements=128, n_eq=1024,
+              prefetch_depth=1)
+    plan = mchain.plan_chain(cfd_chain, **kw)
+    assert plan.cost.pipelined_stages and plan.cost.contention
+
+    store = ProfileStore(path=str(tmp_path / "p.json"), fingerprint="fp")
+    k_true = {}
+    samples = []
+    for i, sp in enumerate(plan.stages):
+        c = plan.cost.stages[i]
+        dev = max(c.t_compute, c.t_hbm)
+        # device-bound evidence: the device part must clear the host link
+        k = max(2.0, 1.5 * c.t_host / dev) + 0.5 * i
+        k_true[sp.name] = k
+        samples.append({
+            "scope": f"stage:{sp.name}",
+            "predicted_s": c.t_pipelined,
+            "measured_s": c.t_overhead + k * dev,
+            "bottleneck": c.bottleneck,
+        })
+    # chain-level sample: the fit must ignore non-stage scopes
+    samples.append({"scope": "chain", "predicted_s": 1.0,
+                    "measured_s": 2.0, "bottleneck": "compute"})
+    assert store.record(plan.target.name, plan.signature,
+                        samples) == len(samples)
+
+    fitted = mchain.plan_chain(cfd_chain, profile=store, **kw)
+    assert len(fitted.cost.contention_fit) == len(fitted.stages)
+    for i, sp in enumerate(fitted.stages):
+        assert fitted.cost.contention_fit[i] == pytest.approx(
+            k_true[sp.name])
+    expect = tuple(
+        max(c.t_host, k_true[sp.name] * max(c.t_compute, c.t_hbm))
+        + c.t_overhead
+        for sp, c in zip(fitted.stages, fitted.cost.stages)
+    )
+    assert fitted.cost.stage_steady_times == pytest.approx(expect)
+    assert "contention fitted from profile" in fitted.report()
+    # everything but the cost fit is the structural plan
+    assert fitted.stages == plan.stages
+    assert fitted.placement == plan.placement
+
+
+def test_contention_fit_keeps_structural_without_evidence(cfd_chain,
+                                                          tmp_path):
+    """Host-bound samples say nothing about device sharing: the fit
+    falls back to the placement's structural count per stage, and a
+    store with no usable samples leaves the plan untouched."""
+    from repro.trace.profile import ProfileStore
+
+    kw = dict(target=channels.ALVEO_U280, batch_elements=128, n_eq=1024,
+              prefetch_depth=1)
+    plan = mchain.plan_chain(cfd_chain, **kw)
+    store = ProfileStore(path=str(tmp_path / "p.json"), fingerprint="fp")
+    host_bound = [{
+        # measured below t_host: the link hides the device terms
+        "scope": f"stage:{sp.name}",
+        "predicted_s": 1.0,
+        "measured_s": c.t_overhead + 0.5 * c.t_host if c.t_host else 1e-12,
+        "bottleneck": "host-link",
+    } for sp, c in zip(plan.stages, plan.cost.stages)]
+    fit = mchain.fit_contention(
+        plan.cost, [sp.name for sp in plan.stages], host_bound)
+    assert fit == ()
+    same = mchain.apply_profile_contention(plan, store)
+    assert same == plan  # cold store: unchanged
+    # one device-bound sample for one stage: the others keep structural
+    c0 = plan.cost.stages[0]
+    dev0 = max(c0.t_compute, c0.t_hbm)
+    k0 = max(2.0, 2.0 * c0.t_host / dev0)
+    partial = mchain.fit_contention(
+        plan.cost, [sp.name for sp in plan.stages],
+        [{"scope": f"stage:{plan.stages[0].name}",
+          "predicted_s": 1.0, "measured_s": c0.t_overhead + k0 * dev0,
+          "bottleneck": "compute"}])
+    assert partial[0] == pytest.approx(k0)
+    assert all(k == 0.0 for k in partial[1:])
+    import dataclasses as _dc
+    cost = _dc.replace(plan.cost, contention_fit=partial)
+    # unfitted stages price with the structural count, fitted with k0
+    assert cost.stage_steady_times[1:] == plan.cost.stage_steady_times[1:]
+    assert cost.stage_steady_times[0] == pytest.approx(
+        max(c0.t_host, k0 * dev0) + c0.t_overhead)

@@ -201,3 +201,46 @@ def test_elastic_remesh_plan():
     with pytest.raises(ValueError):
         plan_elastic_remesh(8, model_axis=16)
     assert rebalance_batch(256, 15) == 255
+
+
+def test_request_latency_delegates_to_metrics_histogram():
+    """RequestLatency is a facade over repro.metrics.Histogram -- same
+    counts, same window, same nearest-rank quantile -- with its public
+    summary() keys unchanged."""
+    from repro.metrics import Histogram
+    from repro.runtime.monitor import RequestLatency
+
+    rl = RequestLatency(window=8)
+    ref = Histogram(window=8)
+    xs = [0.01 * (i + 1) for i in range(20)]
+    for x in xs:
+        rl.record(x)
+        ref.observe(x)
+    # whole-run aggregates delegate exactly
+    assert rl.count == ref.count == 20
+    assert rl.total_s == ref.sum
+    assert rl.max_s == ref.max
+    # quantiles are the histogram's (recent-window nearest rank)
+    for q in (0.0, 0.5, 0.95, 1.0):
+        assert rl.quantile(q) == ref.quantile(q)
+    s = rl.summary()
+    assert sorted(s) == ["count", "max_s", "mean_s", "p50_s", "p95_s"]
+    assert s["count"] == 20.0
+    assert s["mean_s"] == pytest.approx(sum(xs) / len(xs))
+    assert s["p95_s"] == ref.quantile(0.95)
+    # empty tracker reports zeros, not NaNs
+    assert RequestLatency().summary() == {
+        "count": 0.0, "mean_s": 0.0, "p50_s": 0.0, "p95_s": 0.0,
+        "max_s": 0.0}
+
+
+def test_step_monitor_summary_histogram_backed():
+    mon = StepMonitor(straggler_factor=2.0, warmup=0)
+    for _ in range(6):
+        mon.record(1.0)
+    mon.record(5.0)  # flagged
+    s = mon.summary()
+    assert s["count"] == 7.0 and s["max_s"] == 5.0
+    assert s["flagged"] == 1.0
+    assert s["flag_rate"] == pytest.approx(1 / 7)
+    assert s["p50_s"] == 1.0

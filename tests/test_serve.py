@@ -526,3 +526,80 @@ def test_serve_cli_smoke(tmp_path, capsys):
     assert os.path.exists(trace_out)
     doc = json.load(open(trace_out))
     assert doc["traceEvents"]
+
+
+# ---------------------------------------------------------------------------
+# always-on metrics: metering changes nothing, and the snapshot holds
+# ---------------------------------------------------------------------------
+
+def test_metered_engine_bitwise_identical_to_unmetered(system):
+    from repro import metrics as metrics_mod
+
+    reg = metrics_mod.MetricsRegistry()
+    slo = metrics_mod.SLOTracker(5.0, registry=reg)
+    metered = ServeEngine(system, seed=0, metrics=reg, slo=slo)
+    plain = ServeEngine(system, seed=0)
+    sizes = [1, 3, 2, 6, 4]
+    inputs = _requests(metered, sizes)
+    got = [metered.submit(inp) for inp in inputs]
+    metered.drain()
+    want = [plain.submit(inp) for inp in inputs]
+    plain.drain()
+    for g, w in zip(got, want):
+        assert g.error is None and w.error is None
+        for q in metered.out_names:
+            np.testing.assert_array_equal(g.outputs[q], w.outputs[q])
+    # and the two engines agree on every serving stat
+    assert metered.stats == plain.stats
+
+    # the live snapshot satisfies every serving invariant
+    snap = reg.snapshot()
+    checked = metrics_mod.check_snapshot(snap)
+    assert "request-conservation" in checked
+    assert "latency-decomposition" in checked
+    assert "wave-elements" in checked
+    assert "admission-accounting" in checked
+    # SLO saw every finished request
+    v = slo.verdict()
+    assert v["count"] == len(sizes)
+    assert v["verdict"] == "ok"  # synthetic runs are well under 5 s
+
+
+def test_metered_engine_reconciles_with_trace(system):
+    from repro import metrics as metrics_mod
+    from repro.trace.chrome import to_chrome
+
+    reg = metrics_mod.MetricsRegistry()
+    tracer = trace_mod.Tracer()
+    eng = ServeEngine(system, seed=0, metrics=reg, tracer=tracer)
+    for inp in _requests(eng, [3, E, 2]):
+        eng.submit(inp)
+    eng.drain()
+    doc = to_chrome(tracer)
+    checked = metrics_mod.check_snapshot(reg.snapshot(), doc)
+    assert "trace-reconciliation" in checked
+
+
+def test_queue_metrics_wait_age_and_flush_reasons():
+    from repro import metrics as metrics_mod
+
+    reg = metrics_mod.MetricsRegistry()
+    clk = FakeClock()
+    q = AdmissionQueue(4, max_wait_s=5.0, clock=clk, metrics=reg)
+    q.push(_req(0, 4))
+    assert q.pop_wave() is not None        # full wave at t=0
+    q.push(_req(1, 2))
+    clk.t = 6.0
+    assert q.pop_wave() is not None        # expired undersized wave
+    q.push(_req(2, 1))
+    assert q.pop_wave(force=True) is not None
+    idx = {(m["name"], tuple(sorted(m["labels"].items()))): m
+           for m in reg.snapshot()["metrics"]}
+    flush = {lbl[0][1]: m["value"] for (n, lbl), m in idx.items()
+             if n == "admission_flush_total"}
+    assert flush == {"full": 1.0, "max_wait": 1.0, "force": 1.0}
+    wait = idx[("admission_wait_age_seconds", ())]
+    assert wait["count"] == 3 and wait["max"] == 6.0
+    fill = idx[("admission_wave_fill_ratio", ())]
+    assert fill["count"] == 3
+    assert fill["sum"] == pytest.approx(1.0 + 0.5 + 0.25)

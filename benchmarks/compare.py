@@ -15,6 +15,11 @@ Checks, in order of strength:
   * **residency bytes** (deterministic): planner-derived byte counts
     (``host_stream_bytes``) must not grow -- a regression here is a real
     planner change, not noise.
+  * **rung ratio caps** (machine-independent): a baseline row carrying
+    ``max_ratio_vs``/``max_ratio`` pins the current run's us/batch to at
+    most ``max_ratio`` times another current rung's (e.g. the auto-fused
+    pipeline must stay within 1.2x of the hand stage cuts) -- again a
+    ratio of two same-machine measurements.
   * **us/batch per row** (noisy): a row regresses when its measured
     us/batch exceeds baseline * (1 + threshold).  The threshold is
     env-tunable (``BENCH_REGRESSION_THRESHOLD``, default 1.0 = allow up
@@ -103,6 +108,25 @@ def compare(
                 f"us/elem, measured "
                 f"{cur.get('measured_s_per_element', 0) * 1e6:.3f} us/elem)"
             )
+        # rung ratio cap: both sides measured in the *current* run, so
+        # the check is machine-independent (e.g. auto-fused vs hand cuts)
+        ref_name = base.get("max_ratio_vs")
+        cap = base.get("max_ratio")
+        if ref_name and cap:
+            ref = cur_rows.get(ref_name)
+            if ref is None:
+                failures.append(
+                    f"{name}: ratio reference rung {ref_name!r} missing "
+                    "from current run"
+                )
+            elif ref["us_per_batch"] > 0:
+                ratio = c_us / ref["us_per_batch"]
+                if ratio > cap:
+                    failures.append(
+                        f"{name}: {c_us:.1f} us/batch is {ratio:.2f}x "
+                        f"of {ref_name} ({ref['us_per_batch']:.1f} "
+                        f"us/batch), above the {cap:g}x cap"
+                    )
     for name in cur_rows.keys() - base_rows.keys():
         table.append((name, float("nan"), cur_rows[name]["us_per_batch"],
                       "new (no baseline)"))

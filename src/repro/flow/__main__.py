@@ -1,3 +1,4 @@
+"""``python -m repro.flow`` entry point (see flow.cli)."""
 import sys
 
 from .cli import main

@@ -33,8 +33,10 @@ from ..core import dsl, emit, ir, liveness, rewrite
 from ..core.schedule import (Group, Schedule, schedule as make_schedule,
                              stage_partition)
 from ..core.precision import POLICIES
-from ..memory import channels
+from ..memory import channels, layout
 from ..memory.chain import ChainPlan, ChainStage, ProgramChain, plan_chain
+from ..memory.fusion import FusionSpec, fuse_chain_auto
+from ..memory.fusion import _collapse, _collapse_backends
 from ..memory.placement import DeviceTopology
 from . import patterns
 
@@ -429,6 +431,129 @@ def _compile_stages(
     return chain_stages, tuple(effective)
 
 
+def _tune_stage_blocks(
+    stage_specs: List[_Stage],
+    effective: Sequence[str],
+    plan: ChainPlan,
+    policy,
+    target: channels.MemoryTarget,
+    profile,
+) -> Dict[str, int]:
+    """Measured block-size autotuning for the plan's Pallas stages.
+
+    For each Pallas stage, candidate ``block_elements`` come from the
+    CHARM-style tile classes (``kernels.gemm.tile_candidates``: VMEM-
+    filtered, large/small split, throughput-ranked) when the stage fits
+    the GEMM-chain class, else from the power-of-two blocks under the
+    stage's VMEM cap.  Each candidate is compiled and timed on synthetic
+    data at the plan's E; the fastest wins.  Winners (with their
+    predicted-vs-measured sample) are deposited in the profile store
+    keyed by the plan's signature, so later sessions start from the
+    measured choice.  Returns ``{stage name: winning block}``.
+    """
+    import time
+
+    import jax
+    import numpy as np
+    import jax.numpy as jnp
+
+    from ..kernels import gemm
+
+    bps = policy.bits // 8
+    e = plan.batch_elements
+    sp_by_name = {sp.name: sp for sp in plan.stages}
+    winners: Dict[str, int] = {}
+    samples = []
+    for st, backend in zip(stage_specs, effective):
+        if backend != "pallas":
+            continue
+        recipe = patterns.match_gemm_chain(st.program)
+        if recipe is not None:
+            cands = [
+                c.block_elements for c in gemm.tile_candidates(
+                    recipe, vmem_bytes=target.vmem_bytes,
+                    peak_flops=target.peak_flops,
+                    hbm_bandwidth=target.hbm_bw,
+                    bytes_per_scalar=bps, batch_elements=e,
+                )
+            ]
+        else:
+            cap = layout.vmem_block_elements(
+                st.program, target, bytes_per_scalar=bps
+            )
+            cands, be = [], 1
+            while be <= min(cap, e):
+                if e % be == 0:
+                    cands.append(be)
+                be *= 2
+        cands = sorted({b for b in cands if b <= e and e % b == 0})
+        if len(cands) < 2:
+            continue
+        rng = np.random.default_rng(0)
+        elem = set(st.program.element_vars)
+        env = {
+            n: jnp.asarray(
+                rng.standard_normal(
+                    ((e,) + tuple(v.shape)) if n in elem
+                    else tuple(v.shape)
+                ),
+                jnp.float32,
+            )
+            for n, v in st.program.inputs.items()
+        }
+        best = None
+        for be in cands:
+            impl = patterns.pallas_impl_for(
+                st.program, block_elements=be
+            )
+            if impl is None:
+                break
+            fn = emit.compile_program(
+                st.program, policy=policy, backend="pallas",
+                pallas_impl=impl,
+            ).batched_fn
+            jax.tree_util.tree_map(
+                lambda a: a.block_until_ready(), fn(env)
+            )  # compile outside the timed reps
+            t = min(
+                _timed(fn, env) for _ in range(3)
+            )
+            if best is None or t < best[1]:
+                best = (be, t)
+        if best is None:
+            continue
+        winners[st.name] = best[0]
+        sp = sp_by_name.get(st.name)
+        if sp is not None:
+            samples.append({
+                "name": f"tune:{st.name}",
+                "scope": "tune",
+                "predicted_s": max(
+                    sp.cost.t_compute, sp.cost.t_hbm, sp.cost.t_host
+                ),
+                "measured_s": best[1],
+                "block_elements": best[0],
+            })
+    if samples and profile is not None:
+        from ..trace.profile import ProfileStore  # lazy: no import cycle
+
+        store = ProfileStore.open(profile)
+        if store is not None:
+            store.record(target.name, plan.signature, samples)
+    return winners
+
+
+def _timed(fn, env) -> float:
+    """One timed call, outputs synced."""
+    import time
+
+    import jax
+
+    t0 = time.perf_counter()
+    jax.tree_util.tree_map(lambda a: a.block_until_ready(), fn(env))
+    return time.perf_counter() - t0
+
+
 # ---------------------------------------------------------------------------
 # the compiled artifact
 # ---------------------------------------------------------------------------
@@ -455,6 +580,7 @@ class CompiledSystem:
 
     @property
     def stage_names(self) -> Tuple[str, ...]:
+        """Planned stage names, in execution order (post-fusion)."""
         return tuple(s.name for s in self.chain.stages)
 
     def run(self, **kwargs):
@@ -480,6 +606,22 @@ class CompiledSystem:
         elem = set(prog.element_vars)
         n_elem_in = sum(1 for n in prog.inputs if n in elem)
         bps = self.schedule.bytes_per_scalar
+        fu = self.plan.fusion
+        if fu is None:
+            fusion_line = (
+                "  fusion: off (fuse='auto' merges stages whose handoff "
+                "the cost model prices above their combined roofline)"
+            )
+        elif fu.fused:
+            fusion_line = (
+                f"  fusion: {fu.mode} ({fu.n_stages_before} -> "
+                f"{fu.n_stages_after} stages)"
+            )
+        else:
+            fusion_line = (
+                f"  fusion: {fu.mode} (kept all {fu.n_stages_after} "
+                "stages)"
+            )
         lines = [
             f"repro.flow system: {self.name}",
             "  pipeline: DSL source -> teil IR -> schedule -> chain -> "
@@ -492,6 +634,7 @@ class CompiledSystem:
             f" ir nodes, {prog.total_flops()} flops/element",
             f"  schedule: {len(self.schedule.groups)} groups -> "
             f"{len(self.chain.stages)} stages",
+            fusion_line,
             "",
             f"  {'stage':<12} {'backend':<8} {'nodes':>5} "
             f"{'flops/elem':>12} {'in B/elem':>10} {'out B/elem':>10} "
@@ -556,30 +699,73 @@ def compile(
     dse_space=None,
     measure_top: int = 0,
     profile=None,
+    fuse: Optional[str] = None,
+    tune_blocks: bool = False,
 ) -> CompiledSystem:
     """Compile a CFDlang program end-to-end into a planned, executable
     memory architecture.
 
-    ``stages=None`` derives the pipeline automatically from the
-    scheduler's dataflow groups (``max_stages`` forces further collapse,
-    e.g. the paper's 3-stage view); an explicit :data:`StageSpec` names
-    the cuts instead.  ``backend`` applies to every stage unless a
-    per-stage ``backends`` sequence is given; ``pallas`` stages are
-    structurally matched to hand-tiled kernels (``stage_blocks`` pins
-    their VMEM block size, e.g. from a prior plan's per-stage
-    ``block_elements``).  ``cu_count`` (one value or one per stage) and
-    ``devices`` (the topology's device count; default: just enough for
-    the widest stage, ``0`` = detect the local pool) place each stage's
-    CU group on an explicit :class:`DeviceTopology` -- the plan's
-    ``placement`` section prices stages contending for shared devices.
-    ``dse=True`` sweeps chain design points -- including joint per-stage
-    ``(cu, depth)`` placements over that topology -- and adopts the best
-    feasible plan, recompiling stages if the winning backends (or any
-    Pallas stage's VMEM ``block_elements``) differ.  ``profile`` (a
-    ``trace.ProfileStore``, a path, or ``True`` for the default
-    location) warm-starts that sweep's ranking from the persistent
-    per-machine profile store and records any measured candidates back
-    -- exactly ``explore_chain(profile=...)``.
+    Args:
+        source: CFDlang program text (``var input/output [elem]`` decls
+            plus tensor statements).
+        name: Label used in reports and the serving plan cache.
+        element_vars: Names of batched streams when the source does not
+            mark them with ``elem``.
+        stages: Explicit named cuts (:data:`StageSpec`); ``None``
+            derives the pipeline from the scheduler's dataflow groups.
+        target: Memory datasheet -- a :class:`~repro.memory.channels.
+            MemoryTarget`, a name like ``'tpu-v5e'``, or ``None`` to
+            detect.
+        policy: Numeric precision policy name (or policy object).
+        backend: Backend for every stage unless ``backends`` is given.
+        backends: Per-stage backend overrides; ``pallas`` stages are
+            structurally matched to hand-tiled kernels and fall back to
+            ``xla`` when nothing fits.
+        stage_blocks: Per-stage VMEM ``block_elements`` pins for Pallas
+            kernels (e.g. from a prior plan).
+        optimize: Run the middle-end rewrites (factorize/CSE) first.
+        max_stages: With ``stages=None``, cap the schedule's stage
+            count; values below the natural count also imply cost-driven
+            fusion (see ``fuse``).
+        vmem_budget: Override the scheduler's on-chip working-set budget.
+        batch_elements: Explicit E; ``None`` co-sizes it per the
+            paper's channel rule.
+        prefetch_depth: Pipeline depth K, one value or one per stage.
+        cu_count: Compute units per stage, one value or one per stage.
+        devices: Device-topology size (``0`` = detect the local pool).
+        n_eq: Total equations/elements the plan should assume.
+        channel_bytes: Override the target's pseudo-channel capacity.
+        dse: Sweep chain design points and adopt the best feasible plan,
+            recompiling stages if the winning backends or blocks differ.
+        dse_space: A :class:`~repro.memory.dse.ChainDesignSpace`
+            restricting that sweep.
+        measure_top: Verify the k best candidates by measurement.
+        profile: Profile store (store, path, or ``True``) that
+            warm-starts the DSE ranking and records measurements --
+            exactly ``explore_chain(profile=...)``; also receives the
+            ``tune_blocks`` winners.
+        fuse: ``'auto'`` makes the stage count itself a design axis:
+            after scheduling, adjacent stages are greedily merged
+            whenever the planner prices the HBM handoff between them
+            above the fused stage's combined roofline
+            (:mod:`repro.memory.fusion`); merged stages re-enter Pallas
+            pattern matching.  Explicit ``stages`` cuts are barriers --
+            fusion never merges across a named cut.  ``'off'``/``None``
+            keeps every boundary.
+        tune_blocks: Measure candidate VMEM block sizes for each Pallas
+            stage (CHARM-style large/small tile classes filtered by the
+            plan's VMEM budget), adopt the fastest, and deposit the
+            winners in the profile store keyed by the plan signature.
+
+    Returns:
+        A :class:`CompiledSystem`: per-stage callables, the
+        :class:`~repro.memory.chain.ChainPlan` (``plan.fusion`` records
+        the fusion decision when ``fuse`` ran), and the derivation
+        record rendered by :meth:`CompiledSystem.report`.
+
+    Raises:
+        FlowError: On parse errors, unknown targets/policies/backends,
+            malformed stage cuts, or non-element outputs.
     """
     if isinstance(policy, str):
         if policy not in POLICIES:
@@ -655,6 +841,74 @@ def compile(
         channel_bytes=channel_bytes,
     )
 
+    if fuse not in (None, "off", "auto"):
+        raise FlowError(f"unknown fuse mode {fuse!r}; use 'auto' or 'off'")
+    fusion_spec = None
+    if fuse == "auto":
+        if stages is not None or len(chain.stages) == 1:
+            # every explicit named cut is a barrier: fusion is a no-op
+            fusion_spec = FusionSpec(
+                mode="auto",
+                groups=tuple((s.name,) for s in chain.stages),
+                n_stages_before=len(chain.stages),
+                n_stages_after=len(chain.stages),
+                t_unfused=plan.cost.t_pipelined,
+                t_fused=plan.cost.t_pipelined,
+                saved_handoff_bytes=0,
+                barriers=(
+                    tuple(s.name for s in chain.stages)
+                    if stages is not None else ()
+                ),
+            )
+        else:
+            decision = fuse_chain_auto(
+                chain, mode="auto", target=target, policy=pol.name,
+                backends=effective, batch_elements=batch_elements,
+                prefetch_depth=prefetch_depth, cu_count=cu_count,
+                topology=topology, n_eq=n_eq, channel_bytes=channel_bytes,
+            ).fusion
+            fusion_spec = dataclasses.replace(decision, chain=None)
+            if decision.fused:
+                # rebuild the flow's own stages over the merged
+                # partition, so streams/groups/reports stay native and
+                # the merged programs re-enter Pallas pattern matching
+                idx_of = {pname: i for i, (pname, _) in enumerate(parts)}
+                groups_idx = [
+                    tuple(idx_of[n] for n in g) for g in decision.groups
+                ]
+                topo_pos = {
+                    n.uid: i for i, n in enumerate(prog.toposort())
+                }
+                parts = [
+                    (
+                        "+".join(names),
+                        sorted(
+                            (n for i in g for n in parts[i][1]),
+                            key=lambda n: topo_pos[n.uid],
+                        ),
+                    )
+                    for g, names in zip(groups_idx, decision.groups)
+                ]
+                stage_specs, streams = _extract_stages(prog, parts, bps)
+                prefetch_depth = _collapse(prefetch_depth, groups_idx)
+                cu_count = _collapse(cu_count, groups_idx)
+                chain_stages, effective = _compile_stages(
+                    stage_specs, pol,
+                    _collapse_backends(list(backends), groups_idx),
+                    stage_blocks,
+                )
+                chain = ProgramChain(chain_stages)
+                plan = plan_chain(
+                    chain, target=target, policy=pol.name,
+                    backends=effective, batch_elements=batch_elements,
+                    prefetch_depth=prefetch_depth, cu_count=cu_count,
+                    topology=topology, n_eq=n_eq,
+                    channel_bytes=channel_bytes,
+                )
+                fusion_spec = dataclasses.replace(
+                    fusion_spec, t_fused=plan.cost.t_pipelined
+                )
+
     candidates = None
     if dse:
         from ..memory import dse as dse_mod  # lazy: dse measures via cfd
@@ -703,6 +957,40 @@ def compile(
                     placement=plan.placement, n_eq=n_eq,
                     channel_bytes=channel_bytes,
                 )
+
+    if tune_blocks:
+        winners = _tune_stage_blocks(
+            stage_specs, effective, plan, pol, target, profile
+        )
+        stale = {
+            name: be for name, be in winners.items()
+            if any(
+                sp.name == name and sp.block_elements != be
+                for sp in plan.stages
+            )
+        }
+        if stale:
+            blocks = dict(stage_blocks)
+            blocks.update(winners)
+            chain_stages, effective = _compile_stages(
+                stage_specs, pol, effective, blocks
+            )
+            chain = ProgramChain(chain_stages)
+            plan = dataclasses.replace(plan, stages=tuple(
+                dataclasses.replace(
+                    sp,
+                    block_elements=stale[sp.name],
+                    block_working_set_bytes=layout.block_working_set_bytes(
+                        st.program, stale[sp.name], bytes_per_scalar=bps
+                    ),
+                ) if sp.name in stale else sp
+                for sp, st in zip(plan.stages, stage_specs)
+            ))
+
+    if fusion_spec is not None:
+        plan = dataclasses.replace(
+            plan, fusion=dataclasses.replace(fusion_spec, chain=chain)
+        )
 
     sharing = liveness.plan_program(
         [s.group for s in stage_specs], bytes_per_scalar=bps

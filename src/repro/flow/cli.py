@@ -23,6 +23,20 @@ def _parse_args(argv: Optional[Sequence[str]]) -> argparse.Namespace:
         prog="python -m repro.flow",
         description="CFDlang source -> planned, executable memory "
         "architecture (the paper's automated tool flow).",
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+        epilog=(
+            "per-stage vectors:\n"
+            "  --cu-count and --prefetch-depth accept one int for the\n"
+            "  whole chain or a comma-separated per-stage vector, e.g.\n"
+            "  '--cu-count 1,2,1' gives the middle stage two CUs and\n"
+            "  '--prefetch-depth 2,1,1' runs stage 0 two host batches\n"
+            "  ahead. Vector length must match the planned stage count\n"
+            "  (after --fuse auto merges, one entry per ORIGINAL stage;\n"
+            "  merged stages take the max of their members).\n"
+            "\n"
+            "worked examples and the full CLI tour (repro.flow,\n"
+            "repro.serve, repro.metrics, repro.trace): docs/CLI.md\n"
+        ),
     )
     ap.add_argument("source", help="CFDlang program file ('-' for stdin)")
     ap.add_argument("--target", default=None,
@@ -40,6 +54,15 @@ def _parse_args(argv: Optional[Sequence[str]]) -> argparse.Namespace:
     ap.add_argument("--max-stages", type=int, default=None,
                     help="collapse the schedule to at most this many "
                     "stages (paper's 1/2/3/7-module sweeps)")
+    ap.add_argument("--fuse", choices=("auto", "off"), default=None,
+                    help="'auto' makes the stage count a design axis: "
+                    "adjacent stages merge whenever the planner prices "
+                    "their HBM handoff above the fused roofline "
+                    "(explicit cuts are never merged across)")
+    ap.add_argument("--tune-blocks", action="store_true",
+                    help="measure candidate VMEM block sizes per Pallas "
+                    "stage and adopt the fastest (winners go to the "
+                    "--profile store when given)")
     ap.add_argument("--batch-elements", type=int, default=None,
                     help="override E (default: planner auto-sizes + pads)")
     ap.add_argument("--prefetch-depth", default="1",
@@ -94,6 +117,8 @@ def _parse_per_stage(raw, flag: str):
 
 
 def main(argv: Optional[Sequence[str]] = None) -> int:
+    """CLI driver: compile/plan, then --dse/--run/--trace/--metrics as
+    requested.  Exit 0 ok, 1 flow failure, 2 usage error."""
     args = _parse_args(argv)
     try:
         if args.source == "-":
@@ -123,12 +148,14 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     except ValueError as e:
         print(f"error: {e}", file=sys.stderr)
         return 2
-    if args.profile is not None and not args.trace and not args.dse:
+    if (args.profile is not None and not args.trace and not args.dse
+            and not args.tune_blocks):
         # a silently inert flag is worse than an error: recording needs a
-        # traced run, warm-starting needs a DSE sweep
+        # traced run, warm-starting needs a DSE sweep or a block tune
         print(
             "error: --profile does nothing without --trace (record the "
-            "run) or --dse (warm-start the ranking)",
+            "run), --dse (warm-start the ranking), or --tune-blocks "
+            "(record the winners)",
             file=sys.stderr,
         )
         return 2
@@ -149,7 +176,11 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
             devices=args.devices,
             n_eq=args.n_eq,
             dse=args.dse,
-            profile=profile if args.dse else None,
+            fuse=args.fuse,
+            tune_blocks=args.tune_blocks,
+            profile=(
+                profile if (args.dse or args.tune_blocks) else None
+            ),
         )
     except (ParseError, build.FlowError, IRError, ValueError) as e:
         print(f"error: {e}", file=sys.stderr)

@@ -1,0 +1,238 @@
+"""Tiled Pallas GEMM-chain kernel: one fused CU for any stage program
+made of shared-matrix mode contractions and elementwise ops.
+
+The Helmholtz kernel hand-fuses one fixed 7-stage dataflow.  This module
+generalizes the same tiling idiom -- a block of BE elements flows through
+the whole op chain inside VMEM, every mode contraction is one
+``(p x p) x (p x BE*p^(r-1))`` MXU GEMM -- to *any* recipe extracted from
+a stage program by ``flow.patterns.match_gemm_chain``:
+
+  * **contract**: ``y[.., a at mode m, ..] = sum_l M[l, a] * x[.., l, ..]``
+    realized by rotating mode ``m`` to the front, packing the remaining
+    axes (element axis included) into the GEMM minor dimension, and
+    rotating back -- so index order is restored exactly and recipes
+    compose without bookkeeping.
+  * **ewise**: add/sub/mul/div between element values, plus unary
+    neg/scale -- the Hadamard steps of the CFD chain.
+
+One recipe covers the interpolation stage (3 contractions), the gradient
+stage (3 outputs sharing an input), any single schedule-derived stage,
+and the fully fused pipeline -- which is exactly what the cost-driven
+stage fusion pass needs: fused stages re-match to this kernel class
+instead of falling back to XLA.
+
+Grid: ``(E // BE,)``.  Shared matrices are pinned to block 0 (Mosaic
+keeps them VMEM-resident); element tensors stream one block per step
+with the grid pipeline double-buffering the HBM DMA.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BLOCK_ELEMENTS = 128
+
+#: ewise ops the kernel (and the matcher) accept.
+EWISE_OPS = ("add", "sub", "mul", "div", "neg", "scale")
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmRecipe:
+    """A hashable, IR-free description of one GEMM-chain stage.
+
+    ``inputs`` lists every program input as ``(name, shape, is_element)``
+    -- element tensors are rank-r all-``p`` cubes carrying the batch
+    axis, shared inputs are ``(p, p)`` contraction matrices.  Value
+    slots number the inputs first (in order) and then one slot per op
+    result, so ``ops`` and ``outputs`` reference values positionally:
+
+      * ``("contract", src_slot, mat_slot, mode, mat_dim, perm)`` --
+        contract the matrix's ``mat_dim`` axis against tensor mode
+        ``mode``, then permute the element-local axes of the in-place
+        result by ``perm`` (identity for in-place contractions; the
+        gradient einsums move the new free axis to the front);
+      * ``("ewise", op, lhs_slot, rhs_slot, const)`` -- ``rhs_slot`` is
+        ``-1`` for unary ops, ``const`` is None unless ``op=='scale'``.
+
+    ``outputs`` maps output names to slots.  Built by
+    ``flow.patterns.match_gemm_chain``; hashable so compiled kernels
+    cache per (recipe, block, interpret).
+    """
+
+    p: int
+    inputs: Tuple[Tuple[str, Tuple[int, ...], bool], ...]
+    ops: Tuple[Tuple, ...]
+    outputs: Tuple[Tuple[str, int], ...]
+
+    @property
+    def n_inputs(self) -> int:
+        return len(self.inputs)
+
+    def slot_shape(self, slot: int) -> Tuple[int, ...]:
+        """Element-local shape of a value slot (no batch axis)."""
+        shapes = [shape for _, shape, _ in self.inputs]
+        for op in self.ops:
+            if op[0] == "contract":
+                shapes.append(shapes[op[1]])
+            else:
+                shapes.append(shapes[op[2]])
+        return shapes[slot]
+
+    def flops_per_element(self) -> int:
+        """Mirror of ``ir.Node.flops`` summed over the recipe."""
+        total = 0
+        for op in self.ops:
+            if op[0] == "contract":
+                total += 2 * self.p * math.prod(self.slot_shape(op[1]))
+            else:
+                total += math.prod(self.slot_shape(op[2]))
+        return total
+
+
+def apply_recipe(recipe: GemmRecipe, vals, *, f32=jnp.float32):
+    """Run the op chain over loaded values (index 0 is the batch/block
+    axis of element values).  Shared by the Pallas kernel body and the
+    XLA reference path -- a block of BE elements and a full batch of E
+    elements have the same layout, so the code is identical."""
+    p = recipe.p
+    vals = list(vals)
+    for op in recipe.ops:
+        if op[0] == "contract":
+            _, src, mat, mode, mat_dim, perm = op
+            x, m = vals[src], vals[mat]
+            mc = m if mat_dim == 0 else m.T
+            ax = mode + 1                       # skip the batch/block axis
+            xt = jnp.moveaxis(x, ax, 0)         # (p_l, BE, p, ...)
+            xm = xt.reshape(p, -1)              # (p_l, BE * p^(r-1))
+            ym = jax.lax.dot_general(
+                mc, xm, (((0,), (0,)), ((), ())),
+                preferred_element_type=f32,
+            )
+            y = jnp.moveaxis(ym.reshape(xt.shape), 0, ax)
+            if tuple(perm) != tuple(range(len(perm))):
+                y = jnp.transpose(y, (0,) + tuple(q + 1 for q in perm))
+            vals.append(y)
+        else:
+            _, eop, lhs, rhs, const = op
+            a = vals[lhs]
+            if eop == "add":
+                y = a + vals[rhs]
+            elif eop == "sub":
+                y = a - vals[rhs]
+            elif eop == "mul":
+                y = a * vals[rhs]
+            elif eop == "div":
+                y = a / vals[rhs]
+            elif eop == "neg":
+                y = -a
+            elif eop == "scale":
+                y = a * const
+            else:  # pragma: no cover - matcher only emits EWISE_OPS
+                raise ValueError(f"unknown ewise op {eop!r}")
+            vals.append(y)
+    return vals
+
+
+def _kernel(*refs, recipe: GemmRecipe):
+    n_in = recipe.n_inputs
+    vals = [refs[i][...].astype(jnp.float32) for i in range(n_in)]
+    vals = apply_recipe(recipe, vals)
+    for j, (_, slot) in enumerate(recipe.outputs):
+        out_ref = refs[n_in + j]
+        out_ref[...] = vals[slot].astype(out_ref.dtype)
+
+
+@functools.lru_cache(maxsize=None)
+def _pallas_fn(recipe: GemmRecipe, block_elements: int, interpret: bool):
+    """Build (and cache) the jitted pallas_call for one recipe/block."""
+
+    def call(*arrays):
+        e = None
+        for (_, _, is_elem), a in zip(recipe.inputs, arrays):
+            if is_elem:
+                e = a.shape[0]
+                break
+        be = min(block_elements, e)
+        if e % be != 0:
+            raise ValueError(
+                f"element count {e} not divisible by block {be}"
+            )
+        in_specs = []
+        for (_, shape, is_elem) in recipe.inputs:
+            if is_elem:
+                zeros = (0,) * len(shape)
+                in_specs.append(pl.BlockSpec(
+                    (be,) + tuple(shape),
+                    lambda g, _z=zeros: (g,) + _z,
+                ))
+            else:                               # shared: pinned to block 0
+                zeros = (0,) * len(shape)
+                in_specs.append(pl.BlockSpec(
+                    tuple(shape), lambda g, _z=zeros: _z,
+                ))
+        out_dtype = arrays[0].dtype
+        out_specs, out_shape = [], []
+        for _, slot in recipe.outputs:
+            shape = recipe.slot_shape(slot)
+            zeros = (0,) * len(shape)
+            out_specs.append(pl.BlockSpec(
+                (be,) + tuple(shape), lambda g, _z=zeros: (g,) + _z,
+            ))
+            out_shape.append(
+                jax.ShapeDtypeStruct((e,) + tuple(shape), out_dtype)
+            )
+        got = pl.pallas_call(
+            functools.partial(_kernel, recipe=recipe),
+            grid=(e // be,),
+            in_specs=in_specs,
+            out_specs=out_specs,
+            out_shape=out_shape,
+            interpret=interpret,
+        )(*arrays)
+        return got
+
+    return jax.jit(call)
+
+
+def gemm_chain_pallas(
+    recipe: GemmRecipe,
+    env: Dict[str, jax.Array],
+    *,
+    block_elements: int = DEFAULT_BLOCK_ELEMENTS,
+    interpret: bool = False,
+) -> Dict[str, jax.Array]:
+    """Run one recipe through the tiled Pallas kernel.  ``env`` maps the
+    recipe's input names to arrays (element tensors batched on axis 0)."""
+    arrays = tuple(env[name] for name, _, _ in recipe.inputs)
+    got = _pallas_fn(recipe, block_elements, interpret)(*arrays)
+    return {name: out for (name, _), out in zip(recipe.outputs, got)}
+
+
+@functools.lru_cache(maxsize=None)
+def _ref_fn(recipe: GemmRecipe):
+    def call(*arrays):
+        vals = [a.astype(jnp.float32) for a in arrays]
+        vals = apply_recipe(recipe, vals)
+        return [
+            vals[slot].astype(arrays[0].dtype)
+            for _, slot in recipe.outputs
+        ]
+
+    return jax.jit(call)
+
+
+def gemm_chain_ref(
+    recipe: GemmRecipe, env: Dict[str, jax.Array]
+) -> Dict[str, jax.Array]:
+    """Pure-jnp reference: the same recipe applied to the whole batch
+    (element axis 0 plays the block axis)."""
+    arrays = tuple(env[name] for name, _, _ in recipe.inputs)
+    got = _ref_fn(recipe)(*arrays)
+    return {name: out for (name, _), out in zip(recipe.outputs, got)}

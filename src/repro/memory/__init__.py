@@ -12,14 +12,17 @@ CHARM-style and verifies the winners by measurement.
   pipeline  -- generic K-deep prefetch/double-buffer transfer engine
   chain     -- multi-operator ProgramChain planning (inter-stage streams
                stay resident in HBM; one co-sized E for the pipeline)
+  fusion    -- cost-driven stage fusion: the stage count as a DSE axis
+               (merge adjacent stages when the handoff beats the roofline)
   dse       -- design-space explorer + analytic cost model + the
                measured-feedback CostCorrection
   plan      -- the MemoryPlan dataclasses and the Fig.-14-style report
 """
-from . import chain, channels, dse, layout, pipeline, placement, plan
+from . import chain, channels, dse, fusion, layout, pipeline, placement, plan
 from .chain import (ChainPlan, ChainStage, PipelineSpec, ProgramChain,
                     apply_profile_contention, derive_pipeline,
                     fit_contention, plan_chain)
+from .fusion import FusionSpec, fuse_chain, fuse_chain_auto
 from .channels import (ALVEO_U280, CPU_HOST, TPU_V5E, MemoryTarget,
                        UnknownTargetError, detect_target, resolve_target)
 from .placement import (DeviceTopology, PlacementError, PlacementPlan,
@@ -43,5 +46,6 @@ __all__ = [
     "measure_chain_plan",
     "ProgramChain", "ChainStage", "ChainPlan", "plan_chain",
     "fit_contention", "apply_profile_contention",
+    "FusionSpec", "fuse_chain", "fuse_chain_auto", "fusion",
     "BufferSpec", "CostBreakdown", "MemoryPlan",
 ]

@@ -56,10 +56,12 @@ class ChainStage:
 
     @property
     def program(self) -> ir.Program:
+        """The stage's standalone IR program."""
         return self.compiled.program
 
     @property
     def backend(self) -> str:
+        """The backend the stage compiled to (xla/staged/pallas)."""
         return self.compiled.backend
 
 
@@ -188,6 +190,7 @@ class ProgramChain:
     # -- structure queries ---------------------------------------------------
     @property
     def name(self) -> str:
+        """Chain id: stage names joined in execution order."""
         return "->".join(s.name for s in self.stages)
 
     def host_element_inputs(self, i: int) -> List[Tuple[str, ir.Node]]:
@@ -302,6 +305,7 @@ class PipelineSpec:
 
     @property
     def pipelined(self) -> bool:
+        """True when any stage runs batches ahead (cross-batch mode)."""
         return self.mode == "pipelined"
 
 
@@ -363,6 +367,7 @@ class ChainCost:
 
     @property
     def t_serial(self) -> float:
+        """Fully serial chain time per batch (no overlap anywhere)."""
         return sum(c.t_serial for c in self.stages)
 
     @property
@@ -430,6 +435,7 @@ class ChainCost:
 
     @property
     def overlap_speedup(self) -> float:
+        """Predicted speedup of the plan's mode over fully serial."""
         return self.t_serial / self.t_pipelined if self.t_pipelined else 1.0
 
     @property
@@ -544,6 +550,9 @@ class ChainPlan:
     #: cross-batch stage pipelining spec the executor runs off (derived
     #: from the per-stage prefetch depths; None only on legacy plans).
     pipeline: Optional[PipelineSpec] = None
+    #: what the cost-driven fusion pass decided (None when planning ran
+    #: with fusion off); ``fusion.chain`` holds the fused chain.
+    fusion: Optional["FusionSpec"] = None
 
     @property
     def cu_count(self) -> int:
@@ -553,14 +562,17 @@ class ChainPlan:
 
     @property
     def cu_counts(self) -> Tuple[int, ...]:
+        """Per-stage CU replication, from the placement."""
         return self.placement.cu_counts
 
     @property
     def buffers(self) -> Tuple[BufferSpec, ...]:
+        """Every stage's buffers, flattened in chain order."""
         return tuple(b for s in self.stages for b in s.buffers)
 
     @property
     def resident_bytes(self) -> int:
+        """Total HBM bytes held resident across the chain."""
         return sum(b.resident_bytes for b in self.buffers)
 
     @property
@@ -571,10 +583,12 @@ class ChainPlan:
 
     @property
     def hbm_stream_bytes(self) -> int:
+        """Device-memory bytes streamed per batch, chain-wide."""
         return hbm_stream_bytes(self.buffers)
 
     @property
     def channels_used(self) -> int:
+        """Distinct pseudo-channels the chain's buffers map to."""
         return channels_used(self.buffers)
 
     @property
@@ -586,6 +600,7 @@ class ChainPlan:
         )
 
     def batches_for(self, n_eq: int) -> int:
+        """Batches needed to cover an ``n_eq``-element problem."""
         return max(1, n_eq // self.batch_elements)
 
     @property
@@ -604,6 +619,8 @@ class ChainPlan:
         return hashlib.sha1("|".join(parts).encode()).hexdigest()[:12]
 
     def report(self) -> str:
+        """Human-readable plan description: stages, buffers per
+        channel, the cost prediction, and the fusion decision."""
         t = self.target
         mib = 2 ** 20
         lines = [
@@ -677,6 +694,8 @@ class ChainPlan:
                     f"{cc.stage_overlap_speedup:.2f}x over back-to-back "
                     f"{cc.t_back_to_back * 1e3:.3f} ms/batch)"
                 )
+        if self.fusion is not None:
+            lines.append("  " + self.fusion.describe())
         lines.append(
             f"  chain serial {cc.t_serial * 1e3:.3f} ms/batch   "
             f"pipelined {cc.t_pipelined * 1e3:.3f} ms/batch   "
@@ -700,9 +719,22 @@ def plan_chain(
     n_eq: Optional[int] = None,
     channel_bytes: Optional[int] = None,
     profile=None,
+    fuse: Optional[str] = None,
+    max_stages: Optional[int] = None,
+    fuse_barriers: Sequence[str] = (),
     _sched_cache: Optional[Dict[Tuple[int, int], Schedule]] = None,
 ) -> ChainPlan:
     """Plan one memory architecture for a whole ProgramChain.
+
+    ``fuse='auto'`` makes the stage count itself a design axis: the
+    cost-driven fusion pass (:mod:`repro.memory.fusion`) greedily merges
+    adjacent stages whenever the HBM-resident handoff between them costs
+    more than the fused stage's combined roofline, then plans the fused
+    chain (the returned plan carries the decision as ``plan.fusion``).
+    ``max_stages`` forces least-harm merges down to a stage budget
+    (``max_stages=1`` fully fuses) and implies fusion unless
+    ``fuse='off'``; ``fuse_barriers`` names stages whose downstream
+    boundary must survive (the flow's explicit named cuts).
 
     ``backends`` overrides each stage's backend for planning (the DSE
     sweeps hypothetical per-stage backends this way); ``prefetch_depth``
@@ -727,6 +759,36 @@ def plan_chain(
     """
     # local import: dse depends on this module for chain exploration
     from .dse import predict_cost
+
+    if fuse not in (None, "off", "auto"):
+        raise ValueError(f"unknown fuse mode {fuse!r}; use 'auto' or 'off'")
+    if fuse != "off" and (
+        fuse == "auto"
+        or (max_stages is not None and max_stages < len(chain.stages))
+    ):
+        from .fusion import fuse_chain_auto  # lazy: fusion imports chain
+
+        if placement is not None:
+            raise ValueError(
+                "an explicit placement is per-stage and cannot survive "
+                "fusion; pass a topology instead"
+            )
+        return fuse_chain_auto(
+            chain,
+            mode="auto",
+            max_stages=max_stages,
+            barriers=tuple(fuse_barriers),
+            target=target,
+            policy=policy,
+            backends=backends,
+            batch_elements=batch_elements,
+            prefetch_depth=prefetch_depth,
+            cu_count=cu_count,
+            topology=topology,
+            n_eq=n_eq,
+            channel_bytes=channel_bytes,
+            profile=profile,
+        )
 
     target = target if target is not None else detect_target()
     if policy not in POLICIES:

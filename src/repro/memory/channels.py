@@ -51,6 +51,7 @@ class MemoryTarget:
 
     @property
     def usable_hbm_bytes(self) -> int:
+        """HBM capacity after the reserved fraction is held back."""
         return int(self.hbm_bytes * self.usable_hbm_fraction)
 
     def with_(self, **overrides) -> "MemoryTarget":
@@ -121,17 +122,23 @@ def canonical_target_name(name: str) -> str:
 def resolve_target(target) -> MemoryTarget:
     """None -> detect; MemoryTarget -> itself; str -> datasheet lookup
     under :func:`canonical_target_name`.  Unknown names raise
-    :class:`UnknownTargetError` listing every known target."""
+    :class:`UnknownTargetError` listing every known target, with a
+    did-you-mean suggestion for near misses (surfaced verbatim by the
+    CLIs' error path, exit code 2)."""
     if target is None:
         return detect_target()
     if isinstance(target, MemoryTarget):
         return target
     key = canonical_target_name(target)
     if key not in TARGETS:
+        import difflib
+
+        close = difflib.get_close_matches(key, sorted(TARGETS), n=1)
+        hint = f" -- did you mean {close[0]!r}?" if close else ""
         raise UnknownTargetError(
             f"unknown target {target!r}; known targets: "
             f"{', '.join(sorted(TARGETS))} (underscores and dashes are "
-            "interchangeable)"
+            f"interchangeable){hint}"
         )
     return TARGETS[key]
 

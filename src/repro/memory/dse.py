@@ -239,6 +239,7 @@ class Candidate:
 
     @property
     def verified(self) -> bool:
+        """True once this design point has a measured run behind it."""
         return self.measured_s_per_element is not None
 
 
@@ -274,6 +275,7 @@ class CostCorrection:
     def corrected(
         self, predicted_s: float, bottleneck: Optional[str] = None
     ) -> float:
+        """The prediction rescaled by its bottleneck's fitted factor."""
         return predicted_s * self.factor_for(bottleneck)
 
 
@@ -468,6 +470,7 @@ class ChainCandidate:
 
     @property
     def verified(self) -> bool:
+        """True once this design point has a measured run behind it."""
         return self.measured_s_per_element is not None
 
 
@@ -624,9 +627,22 @@ def explore_chain(
     measure_batches: int = 4,
     calibrate: bool = False,
     profile=None,
+    fuse: Optional[str] = None,
+    max_stages: Optional[int] = None,
+    fuse_barriers: Sequence[str] = (),
 ) -> List[ChainCandidate]:
     """Sweep chain plans: per-stage backend combinations and *joint
-    per-stage placements* under one shared (divisor-scaled) E.  Every
+    per-stage placements* under one shared (divisor-scaled) E.
+
+    ``fuse='auto'`` (or a ``max_stages`` budget below the stage count)
+    first runs the cost-driven fusion pass
+    (:func:`repro.memory.fusion.fuse_chain_auto`) with default knobs and
+    then sweeps the *fused* chain -- so every candidate shares one stage
+    structure and the ranking stays homogeneous; each candidate's plan
+    carries the fusion decision as ``plan.fusion``.  ``fuse_barriers``
+    names stages whose downstream boundary fusion must keep.
+
+    Every
     (policy, backends, E) point contributes the classic chain-wide
     uniform (cu, depth) grid plus the ``max_placements`` best joint
     per-stage vectors found by :func:`_search_stage_placements` over
@@ -668,6 +684,21 @@ def explore_chain(
     space = space or ChainDesignSpace()
     if topology is None:
         topology = DeviceTopology.homogeneous(max(1, max(space.cu_counts)))
+
+    fusion_spec = None
+    if fuse == "auto" or (
+        fuse != "off" and max_stages is not None
+        and max_stages < len(chain.stages)
+    ):
+        from .fusion import fuse_chain_auto  # lazy: fusion imports chain
+
+        fused_plan = fuse_chain_auto(
+            chain, mode="auto", max_stages=max_stages,
+            barriers=tuple(fuse_barriers), target=target,
+            topology=topology, n_eq=n_eq,
+        )
+        fusion_spec = fused_plan.fusion
+        chain = fusion_spec.chain
     n_stages = len(chain.stages)
 
     combos = list(
@@ -725,6 +756,10 @@ def explore_chain(
                 for (cus, depths), plan in vectors.items():
                     if plan is None:
                         plan = make_plan_at(cus, depths)
+                    if fusion_spec is not None:
+                        plan = dataclasses.replace(
+                            plan, fusion=fusion_spec
+                        )
                     cands.append(
                         ChainCandidate(
                             plan=plan,

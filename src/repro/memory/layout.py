@@ -86,6 +86,8 @@ class ChannelAllocator:
         self.next = 0
 
     def take(self, count: int) -> Tuple[int, ...]:
+        """Allot the next ``count`` channel ids round-robin (capped at
+        the channel count -- wide buffers stripe what exists)."""
         count = max(1, count)
         ids = tuple((self.next + i) % self.n for i in range(min(count, self.n)))
         self.next = (self.next + count) % self.n

@@ -68,6 +68,7 @@ class DeviceTopology:
     @classmethod
     def homogeneous(cls, n_devices: int,
                     device_kind: str = "generic") -> "DeviceTopology":
+        """A flat topology of ``n_devices`` identical devices."""
         return cls(n_devices=n_devices, device_kind=device_kind)
 
 
@@ -117,26 +118,32 @@ class PlacementPlan:
     # -- vector views --------------------------------------------------------
     @property
     def n_stages(self) -> int:
+        """Number of placed stages."""
         return len(self.stages)
 
     @property
     def cu_counts(self) -> Tuple[int, ...]:
+        """Per-stage CU replication vector."""
         return tuple(sp.cu_count for sp in self.stages)
 
     @property
     def prefetch_depths(self) -> Tuple[int, ...]:
+        """Per-stage dispatch-ring depth vector."""
         return tuple(sp.prefetch_depth for sp in self.stages)
 
     @property
     def max_cu_count(self) -> int:
+        """Widest stage's CU count (the legacy chain-wide scalar)."""
         return max(self.cu_counts)
 
     @property
     def device_groups(self) -> Tuple[Tuple[int, ...], ...]:
+        """Per-stage device-id groups, as placed."""
         return tuple(sp.devices for sp in self.stages)
 
     @property
     def devices_used(self) -> Tuple[int, ...]:
+        """Sorted distinct device ids any stage occupies."""
         used = sorted({d for sp in self.stages for d in sp.devices})
         return tuple(used)
 
@@ -153,6 +160,7 @@ class PlacementPlan:
         )
 
     def disjoint(self) -> bool:
+        """True when no two stages share a device (free pipelining)."""
         return all(c == 1 for c in self.contention)
 
     # -- report --------------------------------------------------------------

@@ -35,6 +35,7 @@ def hbm_stream_bytes(buffers: Iterable["BufferSpec"]) -> int:
 
 
 def channels_used(buffers: Iterable["BufferSpec"]) -> int:
+    """Distinct pseudo-channel ids the buffers map to."""
     used = set()
     for b in buffers:
         used.update(b.channels)
@@ -74,10 +75,12 @@ class BufferSpec:
 
     @property
     def resident_bytes(self) -> int:
+        """HBM footprint: one batch per ping/pong replica."""
         return self.batch_bytes * self.replicas
 
     @property
     def padding_overhead(self) -> float:
+        """Fraction of the buffer that is alignment padding."""
         if self.element_bytes == 0:
             return 0.0
         return self.padded_bytes / self.element_bytes - 1.0
@@ -96,6 +99,7 @@ class CostBreakdown:
 
     @property
     def bottleneck(self) -> str:
+        """The dominating term's label (the correction-fit key)."""
         terms = {
             "compute": self.t_compute,
             "hbm": self.t_hbm,
@@ -105,6 +109,7 @@ class CostBreakdown:
 
     @property
     def overlap_speedup(self) -> float:
+        """Predicted serial/pipelined ratio for this stage."""
         return self.t_serial / self.t_pipelined if self.t_pipelined else 1.0
 
 
@@ -151,6 +156,7 @@ class MemoryPlan:
 
     @property
     def channels_used(self) -> int:
+        """Distinct pseudo-channels this plan's buffers map to."""
         return channels_used(self.buffers)
 
     @property
@@ -176,10 +182,12 @@ class MemoryPlan:
         return tuple(sorted(b.name for b in self.buffers if b.role == "in"))
 
     def batches_for(self, n_eq: int) -> int:
+        """Batches needed to cover an ``n_eq``-element problem."""
         return max(1, n_eq // self.batch_elements)
 
     # -- the "Fig. 14" dump -------------------------------------------------
     def report(self) -> str:
+        """Human-readable plan dump (the paper's Fig. 14 analog)."""
         t = self.target
         c = self.cost
         mib = 2 ** 20

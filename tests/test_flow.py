@@ -121,16 +121,34 @@ def test_flow_named_cuts_match_hand_structure():
     assert "ChainPlan interp->grad->helmholtz" in rep
 
 
-def test_flow_pallas_fallback_when_no_kernel_matches():
-    """A 'pallas' stage with no matching hand-tiled kernel falls back to
-    xla (emit's documented dispatch rule) instead of failing."""
+def test_flow_pallas_covers_interp_and_grad_stages():
+    """The tiled GEMM-chain kernel class covers the interpolation and
+    gradient stages, so 'pallas' no longer falls back to xla there."""
     system = flow.compile(
         operators.CFD_PIPELINE_SRC.format(p=5),
         stages=operators.CFD_PIPELINE_STAGES,
         backends=("pallas", "pallas", "pallas"),
         target=channels.ALVEO_U280,
     )
-    assert system.backends == ("xla", "xla", "pallas")
+    assert system.backends == ("pallas", "pallas", "pallas")
+
+
+def test_flow_pallas_fallback_when_no_kernel_matches():
+    """A 'pallas' stage with no matching hand-tiled kernel falls back to
+    xla (emit's documented dispatch rule) instead of failing.  An
+    element-tensor x element-tensor product with a contraction is outside
+    every kernel class (the GEMM chain needs a shared (p,p) matrix)."""
+    src = (
+        "var input elem a : [4 4]\n"
+        "var input elem b : [4 4]\n"
+        "var output elem y : [4 4]\n"
+        "y = a # b . [[1 2]]\n"
+    )
+    system = flow.compile(
+        src, backend="pallas", target=channels.CPU_HOST,
+        batch_elements=4, n_eq=8,
+    )
+    assert system.backends == ("xla",)
 
 
 def test_flow_output_consumed_downstream_reaches_host(rng):
@@ -302,14 +320,49 @@ def test_flow_dse_recompiles_pallas_block_on_e_change(monkeypatch):
     assert system.plan.batch_elements % blk == 0
 
 
-def test_flow_dse_replans_when_winner_backend_unrealizable():
-    """A winning backend combo that no kernel can realize (pallas on a
-    non-Helmholtz stage) is re-planned at the winner's design point with
-    the backends that actually compiled -- plan and executable always
-    agree, so run_chain never warns about a mismatch."""
+def test_flow_tune_blocks_measures_and_records(tmp_path):
+    """flow.compile(tune_blocks=True) times the candidate VMEM blocks of
+    each Pallas stage, adopts a winner consistent with the plan, and
+    deposits the measured sample in the profile store keyed by the plan
+    signature."""
+    from repro.trace.profile import ProfileStore
+
+    prof = str(tmp_path / "prof.json")
     system = flow.compile(
-        operators.CFD_PIPELINE_SRC.format(p=5),
-        stages=operators.CFD_PIPELINE_STAGES,
+        dsl.INVERSE_HELMHOLTZ_SRC.format(p=5),
+        element_vars=("u", "D", "v"), backend="pallas", max_stages=1,
+        target=channels.CPU_HOST, batch_elements=8, n_eq=16,
+        tune_blocks=True, profile=prof,
+    )
+    assert system.backends == ("pallas",)
+    blk = system.plan.stages[0].block_elements
+    assert blk in (1, 2, 4, 8)
+    assert system.plan.batch_elements % blk == 0
+    store = ProfileStore(path=prof)
+    got = store.samples(channels.CPU_HOST.name, system.plan.signature)
+    tuned = [s for s in got if s.get("scope") == "tune"]
+    assert tuned and tuned[0]["block_elements"] == blk
+    assert tuned[0]["measured_s"] > 0
+
+
+def test_flow_dse_replans_when_winner_backend_unrealizable():
+    """A winning backend combo that no kernel can realize (pallas on an
+    element-by-element contraction, outside every kernel class) is
+    re-planned at the winner's design point with the backends that
+    actually compiled -- plan and executable always agree, so run_chain
+    never warns about a mismatch."""
+    src = (
+        "var input elem a : [4 4]\n"
+        "var input elem b : [4 4]\n"
+        "var input M : [4 4]\n"
+        "var output elem z : [4 4]\n"
+        "var y : [4 4]\n"
+        "y = a # b . [[1 2]]\n"
+        "z = M # y . [[1 2]]\n"
+    )
+    system = flow.compile(
+        src,
+        stages=[("mix", ["y"]), ("proj", ["z"])],
         target=channels.ALVEO_U280, n_eq=1 << 12, dse=True,
         dse_space=dse.ChainDesignSpace(
             backends=("pallas",), batch_divisors=(1,),
@@ -319,7 +372,7 @@ def test_flow_dse_replans_when_winner_backend_unrealizable():
     planned = tuple(sp.backend for sp in system.plan.stages)
     compiled = tuple(s.backend for s in system.chain.stages)
     assert planned == compiled == system.backends
-    assert planned == ("xla", "xla", "pallas")
+    assert planned == ("xla", "pallas")
 
 
 # ---------------------------------------------------------------------------
@@ -403,6 +456,24 @@ def test_target_typo_lists_known_targets():
     # UnknownTargetError is a ValueError: existing CLI/compile callers
     # that catch ValueError keep working
     assert issubclass(channels.UnknownTargetError, ValueError)
+    # near misses get a did-you-mean hint; garbage does not
+    with pytest.raises(
+        channels.UnknownTargetError, match="did you mean 'tpu-v5e'"
+    ):
+        channels.resolve_target("tpu_v5x")
+    try:
+        channels.resolve_target("qqqqqq")
+    except channels.UnknownTargetError as e:
+        assert "did you mean" not in str(e)
+
+
+def test_flow_cli_target_typo_exits_2_with_suggestion(capsys):
+    rc = flow.cli.main([
+        str(EXAMPLES / "inverse_helmholtz.cfd"), "--target", "tpu_v5x",
+    ])
+    assert rc == 2
+    err = capsys.readouterr().err
+    assert "unknown target" in err and "did you mean 'tpu-v5e'" in err
 
 
 def test_flow_cli_error_paths(tmp_path, capsys):

@@ -1,0 +1,265 @@
+"""Cost-driven stage fusion (memory.fusion).  Acceptance: mechanical
+merging is bitwise-neutral through the real chain driver, ``max_stages=1``
+fully fuses, named cuts are never merged across, fused stages re-enter
+Pallas pattern matching, and the greedy decision never adopts a plan the
+cost model prices worse than the unfused baseline."""
+import numpy as np
+import pytest
+
+from repro import flow
+from repro.cfd import operators, simulation
+from repro.flow import patterns
+from repro.memory import chain as mchain
+from repro.memory import channels, dse, fusion
+
+
+def _run(chain, plan, inputs_by_var, shared, n):
+    """Route full input arrays to whichever stage hosts each element
+    stream (stage names differ between fused and unfused chains)."""
+    inputs = {}
+    for i, s in enumerate(chain.stages):
+        for name, _ in chain.host_element_inputs(i):
+            inputs[f"{s.name}.{name}"] = inputs_by_var[name]
+    res = simulation.run_chain(
+        chain, plan, inputs=inputs, shared=shared, collect_outputs=True,
+    )
+    return {q.split(".", 1)[1]: v for q, v in res.outputs.items()}
+
+
+def _cfd_data(rng, p, n):
+    u = rng.uniform(-1, 1, (n, p, p, p)).astype(np.float32)
+    D = rng.uniform(-1, 1, (n, p, p, p)).astype(np.float32)
+    shared = {
+        name: rng.uniform(-1, 1, (p, p)).astype(np.float32)
+        for name in ("A", "Dx", "Dy", "Dz", "S")
+    }
+    return {"u": u, "D": D}, shared
+
+
+# ---------------------------------------------------------------------------
+# mechanical merging (fuse_chain)
+# ---------------------------------------------------------------------------
+
+
+def test_fuse_chain_bitwise_neutral(rng):
+    """Merging interp+grad changes the stage structure, drops the
+    internal 'w' handoff, and leaves every output bitwise-identical."""
+    p, E, n = 5, 8, 16
+    chain = operators.build_cfd_chain(p)
+    t = channels.CPU_HOST
+    elems, shared = _cfd_data(rng, p, n)
+
+    plan = mchain.plan_chain(chain, target=t, batch_elements=E, n_eq=n)
+    want = _run(chain, plan, elems, shared, n)
+
+    fused = fusion.fuse_chain(chain, [(0, 1), (2,)])
+    assert [s.name for s in fused.stages] == ["interp+grad", "helmholtz"]
+    # the w handoff became internal: no longer a stage output
+    assert "w" not in fused.stages[0].program.outputs
+    fplan = mchain.plan_chain(fused, target=t, batch_elements=E, n_eq=n)
+    got = _run(fused, fplan, elems, shared, n)
+
+    assert sorted(got) == sorted(want) == ["gy", "gz", "v"]
+    for out_var in ("gy", "gz", "v"):
+        assert np.array_equal(got[out_var], want[out_var]), out_var
+
+
+def test_fuse_chain_rejects_bad_groups():
+    chain = operators.build_cfd_chain(3)
+    with pytest.raises(ValueError, match="partition"):
+        fusion.fuse_chain(chain, [(0,), (2, 1)])   # out of order
+    with pytest.raises(ValueError, match="partition"):
+        fusion.fuse_chain(chain, [(0, 1)])         # incomplete
+
+
+def test_fused_stage_rematches_pallas():
+    """A merged interp+grad program still fits the tiled GEMM-chain
+    kernel class, so the fused stage keeps backend='pallas' instead of
+    falling back to xla (the point of re-running pattern matching)."""
+    system = operators.compile_cfd_pipeline(
+        5, backends=("pallas", "pallas", "pallas"),
+        target=channels.ALVEO_U280,
+    )
+    assert system.backends == ("pallas", "pallas", "pallas")
+    fused = fusion.fuse_chain(system.chain, [(0, 1), (2,)])
+    assert fused.stages[0].backend == "pallas"
+    assert patterns.match_gemm_chain(fused.stages[0].program) is not None
+
+
+# ---------------------------------------------------------------------------
+# the greedy decision (fuse_chain_auto)
+# ---------------------------------------------------------------------------
+
+
+def test_fuse_auto_max_stages_one_fully_fuses():
+    chain = operators.build_cfd_chain(5)
+    plan = fusion.fuse_chain_auto(
+        chain, max_stages=1, target=channels.ALVEO_U280, n_eq=1 << 12,
+    )
+    assert plan.fusion is not None
+    assert plan.fusion.n_stages_after == len(plan.stages) == 1
+    assert plan.fusion.groups == (("interp", "grad", "helmholtz"),)
+    assert plan.fusion.fused
+
+
+def test_fuse_auto_never_merges_across_barrier():
+    chain = operators.build_cfd_chain(5)
+    plan = fusion.fuse_chain_auto(
+        chain, max_stages=1, barriers=("interp",),
+        target=channels.ALVEO_U280, n_eq=1 << 12,
+    )
+    # the boundary after 'interp' survives even under a 1-stage budget
+    assert plan.fusion.groups[0] == ("interp",)
+    assert len(plan.fusion.groups) == 2
+    with pytest.raises(ValueError, match="unknown stages"):
+        fusion.fuse_chain_auto(chain, barriers=("nosuch",))
+
+
+def test_fuse_auto_cost_monotonic():
+    """The greedy pass only adopts merges the planner prices strictly
+    better, so the fused prediction never exceeds the unfused one -- and
+    on the dispatch-dominated 13-stage auto schedule it does fuse."""
+    system = flow.compile(
+        operators.CFD_PIPELINE_SRC.format(p=5),
+        target=channels.TPU_V5E, n_eq=1 << 14,
+    )
+    assert len(system.chain.stages) > 3
+    plan = fusion.fuse_chain_auto(
+        system.chain, target=channels.TPU_V5E, n_eq=1 << 14,
+    )
+    spec = plan.fusion
+    assert spec.fused
+    assert spec.t_fused < spec.t_unfused
+    assert spec.saved_handoff_bytes > 0
+    assert plan.cost.t_pipelined == spec.t_fused
+    # the fused chain rides along for execution but stays out of equality
+    assert spec.chain is not None
+    assert len(spec.chain.stages) == spec.n_stages_after
+
+
+# ---------------------------------------------------------------------------
+# planner/DSE surface (plan_chain fuse=..., explore_chain fuse=...)
+# ---------------------------------------------------------------------------
+
+
+def test_plan_chain_fuse_param():
+    chain = operators.build_cfd_chain(5)
+    t = channels.ALVEO_U280
+    off = mchain.plan_chain(chain, target=t, n_eq=1 << 12, fuse="off")
+    assert off.fusion is None
+    auto = mchain.plan_chain(chain, target=t, n_eq=1 << 12, fuse="auto")
+    assert auto.fusion is not None
+    assert auto.fusion.n_stages_before == 3
+    # a stage budget below the chain length triggers fusion on its own
+    budget = mchain.plan_chain(chain, target=t, n_eq=1 << 12, max_stages=1)
+    assert len(budget.stages) == 1
+    with pytest.raises(ValueError, match="fuse"):
+        mchain.plan_chain(chain, target=t, n_eq=1 << 12, fuse="nosuch")
+
+
+def test_explore_chain_prefuses():
+    chain = operators.build_cfd_chain(5)
+    cands = dse.explore_chain(
+        chain, target=channels.TPU_V5E, n_eq=1 << 14, fuse="auto",
+        space=dse.ChainDesignSpace(
+            backends=("xla",), batch_divisors=(1, 2),
+            prefetch_depths=(1,), max_backend_combos=1,
+        ),
+    )
+    assert cands
+    for c in cands:
+        assert c.plan.fusion is not None
+
+
+# ---------------------------------------------------------------------------
+# flow integration (flow.compile fuse=...)
+# ---------------------------------------------------------------------------
+
+
+def test_flow_fuse_auto_bitwise_vs_unfused(rng):
+    """flow.compile(fuse='auto') on the auto-scheduled CFD pipeline
+    merges stages yet reproduces the unfused outputs bitwise."""
+    p, E, n = 5, 16, 32
+    src = operators.CFD_PIPELINE_SRC.format(p=p)
+    t = channels.TPU_V5E
+    base = flow.compile(src, target=t, batch_elements=E, n_eq=n)
+    fused = flow.compile(
+        src, target=t, batch_elements=E, n_eq=n, fuse="auto",
+    )
+    assert fused.plan.fusion is not None and fused.plan.fusion.fused
+    assert len(fused.chain.stages) < len(base.chain.stages)
+    assert "fusion: auto" in fused.report()
+    assert "fusion:" in fused.plan.report()
+
+    elems, shared = _cfd_data(rng, p, n)
+    want = _run(base.chain, base.plan, elems, shared, n)
+    got = _run(fused.chain, fused.plan, elems, shared, n)
+    for out_var in ("gy", "gz", "v"):
+        assert np.array_equal(got[out_var], want[out_var]), out_var
+
+
+def test_flow_named_cuts_are_fusion_barriers():
+    """Explicit stage cuts are promises: fuse='auto' never merges across
+    them, so the named pipeline comes back structurally untouched."""
+    system = flow.compile(
+        operators.CFD_PIPELINE_SRC.format(p=5),
+        stages=operators.CFD_PIPELINE_STAGES,
+        target=channels.ALVEO_U280, fuse="auto",
+    )
+    assert system.stage_names == ("interp", "grad", "helmholtz")
+    spec = system.plan.fusion
+    assert spec is not None and not spec.fused
+    assert set(spec.barriers) == {"interp", "grad", "helmholtz"}
+
+
+def test_flow_fuse_validation():
+    with pytest.raises(flow.FlowError, match="fuse"):
+        flow.compile(
+            operators.CFD_PIPELINE_SRC.format(p=3),
+            target=channels.CPU_HOST, fuse="nosuch",
+        )
+
+
+# ---------------------------------------------------------------------------
+# CI gate: the auto-fused rung's ratio cap in benchmarks/compare.py
+# ---------------------------------------------------------------------------
+
+
+def test_bench_compare_enforces_max_ratio_cap():
+    """A baseline row carrying max_ratio_vs/max_ratio caps the current
+    run's us/batch against another current rung -- the machine-
+    independent gate keeping auto-fused within 1.2x of the hand cuts."""
+    import importlib.util
+    import pathlib
+
+    spec = importlib.util.spec_from_file_location(
+        "bench_compare",
+        pathlib.Path(__file__).parent.parent / "benchmarks" / "compare.py",
+    )
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    base = {"rows": [
+        {"name": "hand_stage_cuts", "us_per_batch": 100.0},
+        {"name": "chain_auto_fused", "us_per_batch": 105.0,
+         "max_ratio_vs": "hand_stage_cuts", "max_ratio": 1.2},
+    ]}
+    ok = {"rows": [
+        {"name": "hand_stage_cuts", "us_per_batch": 200.0},
+        {"name": "chain_auto_fused", "us_per_batch": 230.0},
+    ]}
+    fails, _ = mod.compare(base, ok, threshold=10.0)
+    assert fails == []
+    # 300/200 = 1.5x > 1.2x cap, even though 300 < baseline*(1+thr)
+    bad = {"rows": [
+        {"name": "hand_stage_cuts", "us_per_batch": 200.0},
+        {"name": "chain_auto_fused", "us_per_batch": 300.0},
+    ]}
+    fails, _ = mod.compare(base, bad, threshold=10.0)
+    assert any("above the 1.2x cap" in f for f in fails)
+    # a vanished reference rung is itself a failure
+    fails, _ = mod.compare(
+        base, {"rows": [
+            {"name": "chain_auto_fused", "us_per_batch": 100.0},
+        ]}, threshold=10.0,
+    )
+    assert any("missing" in f for f in fails)

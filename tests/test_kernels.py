@@ -5,6 +5,7 @@ import numpy as np
 import pytest
 
 from repro.cfd import reference
+from repro.kernels import gemm
 from repro.kernels.attention import ops as attn_ops
 from repro.kernels.attention.ref import attention_ref
 from repro.kernels.helmholtz import ops as hh_ops
@@ -117,3 +118,183 @@ def test_flash_attention_xla_path_matches(rng):
     b = np.asarray(attn_ops.multi_head_attention(
         q, k, v, impl="interpret", block_q=16, block_k=16))
     np.testing.assert_allclose(a, b, rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# tiled GEMM-chain kernel
+# ---------------------------------------------------------------------------
+
+def _interp_recipe(p):
+    """Interpolation: three mode contractions of A against u."""
+    return gemm.GemmRecipe(
+        p=p,
+        inputs=(("A", (p, p), False), ("u", (p, p, p), True)),
+        ops=(
+            ("contract", 1, 0, 0, 0, (0, 1, 2)),
+            ("contract", 2, 0, 1, 0, (0, 1, 2)),
+            ("contract", 3, 0, 2, 0, (0, 1, 2)),
+        ),
+        outputs=(("w", 4),),
+    )
+
+
+def _interp_oracle(A, u):
+    return np.einsum("li,mj,nk,elmn->eijk", A, A, A, u)
+
+
+@pytest.mark.parametrize("p", [3, 5, 11])
+@pytest.mark.parametrize("be", [2, 4])
+def test_gemm_chain_interpolation_vs_oracle(p, be, rng):
+    E = 8
+    A = rng.uniform(-1, 1, (p, p)).astype(np.float32)
+    u = rng.uniform(-1, 1, (E, p, p, p)).astype(np.float32)
+    recipe = _interp_recipe(p)
+    want = _interp_oracle(A.astype(np.float64), u.astype(np.float64))
+    for impl in ("xla", "interpret"):
+        got = np.asarray(gemm.gemm_chain(
+            recipe, {"A": A, "u": u}, impl=impl, block_elements=be,
+        )["w"])
+        np.testing.assert_allclose(got, want, rtol=5e-4, atol=5e-4)
+
+
+def test_gemm_chain_perm_moves_free_axis(rng):
+    """A gradient-style contraction whose output reorders the element
+    axes: y[e,f,a,c] = sum_l M[l,f] u[e,a,l,c] (free axis moved to the
+    front via the recipe's perm, not left in place)."""
+    p, E = 5, 4
+    M = rng.uniform(-1, 1, (p, p)).astype(np.float32)
+    u = rng.uniform(-1, 1, (E, p, p, p)).astype(np.float32)
+    recipe = gemm.GemmRecipe(
+        p=p,
+        inputs=(("M", (p, p), False), ("u", (p, p, p), True)),
+        ops=(("contract", 1, 0, 1, 0, (1, 0, 2)),),
+        outputs=(("y", 2),),
+    )
+    want = np.einsum("lf,ealc->efac", M, u)
+    for impl in ("xla", "interpret"):
+        got = np.asarray(gemm.gemm_chain(
+            recipe, {"M": M, "u": u}, impl=impl, block_elements=2,
+        )["y"])
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_gemm_chain_ewise_and_multi_output(rng):
+    """Elementwise ops between matched values plus two outputs sharing
+    the chain: w = A.u (mode 0), z = (w * u) scaled by 0.5."""
+    p, E = 4, 8
+    A = rng.uniform(-1, 1, (p, p)).astype(np.float32)
+    u = rng.uniform(-1, 1, (E, p, p, p)).astype(np.float32)
+    recipe = gemm.GemmRecipe(
+        p=p,
+        inputs=(("A", (p, p), False), ("u", (p, p, p), True)),
+        ops=(
+            ("contract", 1, 0, 0, 0, (0, 1, 2)),
+            ("ewise", "mul", 2, 1, None),
+            ("ewise", "scale", 3, -1, 0.5),
+        ),
+        outputs=(("w", 2), ("z", 4)),
+    )
+    w = np.einsum("li,elmn->eimn", A, u)
+    for impl in ("xla", "interpret"):
+        got = gemm.gemm_chain(
+            recipe, {"A": A, "u": u}, impl=impl, block_elements=4,
+        )
+        np.testing.assert_allclose(
+            np.asarray(got["w"]), w, rtol=1e-5, atol=1e-5
+        )
+        np.testing.assert_allclose(
+            np.asarray(got["z"]), 0.5 * w * u, rtol=1e-5, atol=1e-5
+        )
+
+
+def test_gemm_chain_block_size_invariance(rng):
+    p, E = 5, 8
+    A = rng.uniform(-1, 1, (p, p)).astype(np.float32)
+    u = rng.uniform(-1, 1, (E, p, p, p)).astype(np.float32)
+    recipe = _interp_recipe(p)
+    outs = [
+        np.asarray(gemm.gemm_chain(
+            recipe, {"A": A, "u": u}, impl="interpret", block_elements=be,
+        )["w"])
+        for be in (1, 2, 8)
+    ]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], rtol=1e-6, atol=1e-6)
+
+
+def test_gemm_chain_rejects_ragged_blocks(rng):
+    p = 3
+    A = rng.uniform(-1, 1, (p, p)).astype(np.float32)
+    u = rng.uniform(-1, 1, (6, p, p, p)).astype(np.float32)
+    with pytest.raises(ValueError, match="not divisible"):
+        gemm.gemm_chain(
+            _interp_recipe(p), {"A": A, "u": u},
+            impl="interpret", block_elements=4,
+        )
+
+
+def test_gemm_recipe_flops_match_ir():
+    """The recipe's flop model agrees with the IR's on the matched
+    interpolation stage (3 contractions of 2*p^4 each)."""
+    p = 7
+    recipe = _interp_recipe(p)
+    assert recipe.flops_per_element() == 3 * 2 * p ** 4
+    assert recipe.slot_shape(4) == (p, p, p)
+
+
+# ---------------------------------------------------------------------------
+# CHARM-style tile candidates (cdse/cdac)
+# ---------------------------------------------------------------------------
+
+def test_tile_candidates_filter_class_and_rank():
+    recipe = _interp_recipe(11)
+    vmem = 16 * 2 ** 20
+    cands = gemm.tile_candidates(
+        recipe, vmem_bytes=vmem, peak_flops=1e12, hbm_bandwidth=400e9,
+    )
+    assert cands
+    budget = vmem * 0.5
+    for c in cands:
+        # the VMEM constraint is honored and the working set is exact
+        assert c.working_set_bytes <= budget
+        assert c.working_set_bytes == gemm.block_working_set_bytes(
+            recipe, c.block_elements
+        )
+        expect = (
+            "cdse" if c.working_set_bytes
+            > budget * gemm.cdse_cdac.LARGE_CLASS_FRACTION else "cdac"
+        )
+        assert c.klass == expect
+    # ranked best-first by modeled throughput
+    ths = [c.predicted_throughput for c in cands]
+    assert ths == sorted(ths, reverse=True)
+    # both classes are represented across the block range
+    assert {c.klass for c in cands} == {"cdse", "cdac"}
+
+
+def test_tile_candidates_respect_batch_divisibility():
+    recipe = _interp_recipe(5)
+    cands = gemm.tile_candidates(
+        recipe, vmem_bytes=64 * 2 ** 20, peak_flops=1e12,
+        hbm_bandwidth=400e9, batch_elements=96,
+    )
+    assert cands
+    for c in cands:
+        assert 96 % c.block_elements == 0
+    assert max(c.block_elements for c in cands) == 32
+
+
+def test_tile_candidates_empty_when_vmem_too_small():
+    assert gemm.tile_candidates(
+        _interp_recipe(11), vmem_bytes=4096, peak_flops=1e12,
+        hbm_bandwidth=400e9,
+    ) == []
+
+
+def test_block_elements_for_vmem_monotone():
+    recipe = _interp_recipe(7)
+    small = gemm.block_elements_for_vmem(recipe, 2 ** 20)
+    large = gemm.block_elements_for_vmem(recipe, 2 ** 24)
+    assert 1 <= small < large
+    # the chosen block actually fits half the budget
+    assert gemm.block_working_set_bytes(recipe, large) <= 2 ** 23

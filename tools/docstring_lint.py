@@ -1,0 +1,112 @@
+"""Docstring lint for the public planner API (no pip dependencies).
+
+A hand-rolled pydocstyle subset: every public module, class, function,
+and method under the linted packages must carry a non-empty docstring.
+"Public" means the name (and every enclosing scope) does not start with
+an underscore; ``__init__`` is exempt when its class is documented,
+other dunders are exempt always.  Purely structural wrappers are not
+exempt -- if it is importable and callable, it is documented.
+
+Usage::
+
+    python tools/docstring_lint.py [PATH ...]
+
+With no arguments, lints the planner stack: ``src/repro/flow`` and
+``src/repro/memory``.  Exit 0 when clean, 1 with one ``path:line: name``
+violation per line, 2 on usage/parse errors.
+
+Run by CI's test job and by ``tests/test_docs.py``; see
+``docs/ARCHITECTURE.md`` for what counts as the public planner API.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+import sys
+from typing import Iterator, List, Tuple
+
+DEFAULT_PATHS = ("src/repro/flow", "src/repro/memory")
+
+Violation = Tuple[pathlib.Path, int, str]
+
+
+def _public(name: str) -> bool:
+    return not name.startswith("_")
+
+
+def _has_docstring(node) -> bool:
+    doc = ast.get_docstring(node, clean=False)
+    return bool(doc and doc.strip())
+
+
+def _walk_scope(
+    node, qualname: str, path: pathlib.Path
+) -> Iterator[Violation]:
+    """Yield violations for every public def/class directly inside
+    ``node``, recursing only through public scopes (private containers
+    make everything inside them private)."""
+    for child in ast.iter_child_nodes(node):
+        if isinstance(
+            child, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)
+        ):
+            name = child.name
+            if name.startswith("__") and name.endswith("__"):
+                continue  # dunders ride on their class's docstring
+            if not _public(name):
+                continue
+            q = f"{qualname}.{name}" if qualname else name
+            if not _has_docstring(child):
+                yield (path, child.lineno, q)
+            if isinstance(child, ast.ClassDef):
+                yield from _walk_scope(child, q, path)
+            # function bodies are local scope: nothing inside is public
+
+
+def lint_file(path: pathlib.Path) -> List[Violation]:
+    tree = ast.parse(path.read_text(), filename=str(path))
+    out: List[Violation] = []
+    if not _has_docstring(tree):
+        out.append((path, 1, "<module>"))
+    out.extend(_walk_scope(tree, "", path))
+    return out
+
+
+def lint_paths(paths) -> List[Violation]:
+    """Lint every ``*.py`` file under each path (files accepted too)."""
+    out: List[Violation] = []
+    for p in paths:
+        p = pathlib.Path(p)
+        files = sorted(p.rglob("*.py")) if p.is_dir() else [p]
+        if not files or not p.exists():
+            raise FileNotFoundError(f"no Python files under {p}")
+        for f in files:
+            out.extend(lint_file(f))
+    return out
+
+
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    paths = argv or [
+        str(pathlib.Path(__file__).resolve().parent.parent / d)
+        for d in DEFAULT_PATHS
+    ]
+    try:
+        violations = lint_paths(paths)
+    except (OSError, SyntaxError) as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+    for path, line, name in violations:
+        print(f"{path}:{line}: missing docstring: {name}")
+    if violations:
+        print(
+            f"{len(violations)} public name(s) without docstrings "
+            "(see tools/docstring_lint.py)",
+            file=sys.stderr,
+        )
+        return 1
+    print(f"docstring lint clean ({', '.join(str(p) for p in paths)})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

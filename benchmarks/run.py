@@ -353,8 +353,69 @@ def _sharded_worker(p: int, E: int, n_b: int) -> None:
     }))
 
 
-def _run_sharded_rung(p: int, E: int, n_b: int) -> dict:
-    """Launch :func:`_sharded_worker` with 2 forced host devices."""
+def _hetero_worker(p: int, E: int, n_b: int) -> None:
+    """Subprocess body for the heterogeneous rung: the same chain over a
+    *declared* 2-kind topology (cpu-host + alveo-u280, one device each),
+    stage 0 placed on the host group at half the chain E so the 0->1
+    handoff crosses both an E change and a kind change and exercises the
+    re-blocking path.  Both devices are really CPU host devices (forced
+    by the parent), so the rung tracks the re-block machinery's wall
+    cost, not a speedup -- and the declared-kind pricing is meaningless
+    on this silicon, so no prediction fields are reported.
+    """
+    import json
+
+    from repro.cfd.simulation import run_chain
+    from repro.memory import chain as mchain
+    from repro.memory import channels as mchan
+    from repro.memory.placement import DeviceTopology
+
+    assert jax.device_count() == 2, jax.devices()
+    n_eq = E * n_b
+    chain = operators.build_cfd_chain(p)
+    flops_pe = sum(s.program.total_flops() for s in chain.stages)
+    rng = np.random.default_rng(7)
+    inputs = {
+        "interp.u": rng.uniform(-1, 1, (n_eq, p, p, p)).astype(np.float32),
+        "helmholtz.D": rng.uniform(
+            -1, 1, (n_eq, p, p, p)
+        ).astype(np.float32),
+    }
+    shared = {
+        name: rng.uniform(-1, 1, node.shape).astype(np.float32)
+        for name, node in sorted(chain.shared_operands().items())
+    }
+    plan = mchain.plan_chain(
+        chain, target=mchan.ALVEO_U280, batch_elements=E,
+        prefetch_depth=1,
+        topology=DeviceTopology.parse("cpu:1,alveo:1"),
+        stage_groups=(0, 1, 1), stage_batch_elements=(E // 2, E, E),
+        n_eq=n_eq,
+    )
+    assert plan.cost.t_reblock and plan.cost.t_reblock[1] > 0
+    run_chain(chain, plan, inputs=inputs, shared=shared,
+              max_batches=2)  # warm
+    best = min(
+        (run_chain(chain, plan, inputs=inputs, shared=shared,
+                   n_eq=n_eq, max_batches=n_b)
+         for _ in range(3)),
+        key=lambda r: r.wall_s,
+    )
+    assert best.placement_groups is not None  # really ran placed
+    print(json.dumps({
+        "us_per_batch": best.wall_s / best.batches * 1e6,
+        "gflops": best.elements * flops_pe / best.wall_s / 1e9,
+        "groups": [list(g) for g in best.placement_groups],
+        "kinds": [plan.placement.stage_kind(i)
+                  for i in range(len(plan.stages))],
+        "stage_e": list(plan.stage_batch_elements),
+    }))
+
+
+def _run_sharded_rung(p: int, E: int, n_b: int,
+                      worker: str = "_sharded_worker") -> dict:
+    """Launch a forced-2-host-device worker subprocess (the only way to
+    exercise multi-device placement on a CPU container)."""
     import json
     import os
     import subprocess
@@ -363,13 +424,12 @@ def _run_sharded_rung(p: int, E: int, n_b: int) -> dict:
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
     env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
     res = subprocess.run(
-        [sys.executable, __file__, "_sharded_worker",
-         str(p), str(E), str(n_b)],
+        [sys.executable, __file__, worker, str(p), str(E), str(n_b)],
         capture_output=True, text=True, env=env, timeout=600,
     )
     if res.returncode != 0:
         raise RuntimeError(
-            f"sharded rung subprocess failed:\n{res.stderr[-3000:]}"
+            f"{worker} rung subprocess failed:\n{res.stderr[-3000:]}"
         )
     return json.loads(res.stdout.strip().splitlines()[-1])
 
@@ -482,6 +542,21 @@ def chain_ladder() -> None:
     emit("chained_sharded_2dev", sh["us_per_batch"], sh["gflops"],
          f"groups={sh['groups']};pred={sh['pred_us']:.0f}us",
          pred_s=sh["pred_us"] * 1e-6)
+
+    # heterogeneous rung: the same chain over a declared 2-kind topology
+    # (cpu-host + alveo-u280) with the host stage re-blocked to E/2, so
+    # every batch pays a real re-blocking handoff.  No prediction fields
+    # -- the declared-kind pricing does not describe this CPU container.
+    # The checked-in baseline caps this rung at max_ratio_vs the
+    # homogeneous sharded rung: re-blocking must stay within 1.5x of the
+    # plain 2-device placement, machine-independently.
+    het = _run_sharded_rung(p, E, n_b, worker="_hetero_worker")
+    emit("chained_hetero_2kind", het["us_per_batch"], het["gflops"],
+         f"groups={het['groups']};kinds={','.join(het['kinds'])};"
+         f"stage_e={het['stage_e']}")
+    rows[-1].update(
+        {"max_ratio_vs": "chained_sharded_2dev", "max_ratio": 1.5}
+    )
 
     # the residency claim, in bytes: chain host streams vs the sum of
     # three standalone plans at the same E
@@ -762,8 +837,12 @@ BENCHES = {
 
 
 def main() -> None:
-    if len(sys.argv) > 1 and sys.argv[1] == "_sharded_worker":
-        _sharded_worker(
+    workers = {
+        "_sharded_worker": _sharded_worker,
+        "_hetero_worker": _hetero_worker,
+    }
+    if len(sys.argv) > 1 and sys.argv[1] in workers:
+        workers[sys.argv[1]](
             int(sys.argv[2]), int(sys.argv[3]), int(sys.argv[4])
         )
         return

@@ -344,10 +344,9 @@ def run_chain(
         plan = memchain.plan_chain(
             chain, target=memchannels.detect_target(),
             cu_count=len(local_devices),
-            topology=DeviceTopology(
-                n_devices=len(local_devices),
-                device_kind=local_devices[0].platform,
-            ),
+            # per-device kind derivation: a mixed local pool becomes a
+            # grouped topology instead of N copies of device 0's platform
+            topology=DeviceTopology.from_jax(local_devices),
             n_eq=n_eq,
         )
     planned = tuple(sp.backend for sp in plan.stages)
@@ -497,7 +496,25 @@ def run_chain(
                 tracer.bump(COUNTER_PAD_ELEMENTS, {"pad": float(pad)})
             return inner_stage_batch(batch)
 
+    # per-stage E_s: a heterogeneous plan runs some stages at a smaller
+    # batch than the chain E -- the re-blocking handoff slices the chain
+    # batch into E_s sub-batches on device and concatenates the outputs
+    # (bitwise-equal to the full-batch call: elements are independent)
+    stage_es = [
+        plan.stage_e(i) if hasattr(plan, "stage_e") else E
+        for i in range(len(plan.stages))
+    ]
+    if len(stage_es) != len(chain.stages):
+        stage_es = [E] * len(chain.stages)
+
     def make_stage_fn(i: int, s: memchain.ChainStage):
+        batched_fn = s.compiled.batched_fn
+        e_s = stage_es[i]
+        if 0 < e_s < E:
+            batched_fn = mempipe.reblock_batched_fn(
+                batched_fn, tuple(s.program.element_vars), e_s
+            )
+
         def run_stage(staged, carry):
             live: Dict[str, jax.Array] = dict(carry) if carry else {}
             env: Dict[str, jax.Array] = {}
@@ -511,7 +528,7 @@ def run_chain(
                     env[name] = shared_for_stage[i][name]
                 else:
                     env[name] = staged[f"{s.name}.{name}"]
-            outs = s.compiled.batched_fn(env)
+            outs = batched_fn(env)
             for out_name, val in outs.items():
                 live[f"{s.name}.{out_name}"] = val
             return live

@@ -113,15 +113,25 @@ def program_fingerprint(prog: ir.Program) -> str:
     return hashlib.sha1("|".join(parts).encode()).hexdigest()
 
 
-def topology_fingerprint(devices: Optional[int]) -> str:
+def topology_fingerprint(
+    devices: Union[None, int, str, DeviceTopology],
+) -> str:
     """The cache-key view of ``compile(devices=...)``: what machine the
     placement was co-scheduled for.  ``0`` (detect) resolves the local
-    pool *now*, so a cache entry can never leak across pool changes."""
+    pool *now*, so a cache entry can never leak across pool changes.
+    Heterogeneous specs (``"cpu:2,tpu:4"`` strings or explicit
+    :class:`DeviceTopology` values) hash their full per-group layout via
+    ``spec_string()`` -- two fleets with the same device count but
+    different kind mixes never share a plan-cache entry."""
     if devices is None:
         return "auto"
+    if isinstance(devices, DeviceTopology):
+        return devices.spec_string()
+    if isinstance(devices, str):
+        return DeviceTopology.parse(devices).spec_string()
     if devices == 0:
         t = DeviceTopology.detect()
-        return f"{t.n_devices}x{t.device_kind}"
+        return t.spec_string()
     return f"{devices}xgeneric"
 
 
@@ -132,7 +142,7 @@ def cache_key(
     target: Union[None, str, channels.MemoryTarget] = None,
     policy: Union[str, object] = "float32",
     optimize: bool = True,
-    devices: Optional[int] = None,
+    devices: Union[None, int, str, DeviceTopology] = None,
     **kwargs,
 ) -> str:
     """The plan-cache key for one :func:`compile` call: ``(sha of the
@@ -692,7 +702,7 @@ def compile(
     batch_elements: Optional[int] = None,
     prefetch_depth: Union[int, Sequence[int]] = 1,
     cu_count: Union[int, Sequence[int]] = 1,
-    devices: Optional[int] = None,
+    devices: Union[None, int, str, DeviceTopology] = None,
     n_eq: Optional[int] = None,
     channel_bytes: Optional[int] = None,
     dse: bool = False,
@@ -732,7 +742,12 @@ def compile(
             paper's channel rule.
         prefetch_depth: Pipeline depth K, one value or one per stage.
         cu_count: Compute units per stage, one value or one per stage.
-        devices: Device-topology size (``0`` = detect the local pool).
+        devices: Device topology the stage CU groups are placed on: an
+            int (homogeneous pool of that size; ``0`` = detect the
+            local JAX pool, including mixed-kind fleets), a spec string
+            like ``"cpu:2,tpu:4"`` (heterogeneous groups, each priced
+            against its own datasheet), or an explicit
+            :class:`~repro.memory.placement.DeviceTopology`.
         n_eq: Total equations/elements the plan should assume.
         channel_bytes: Override the target's pseudo-channel capacity.
         dse: Sweep chain design points and adopt the best feasible plan,
@@ -827,12 +842,19 @@ def compile(
     )
     chain = ProgramChain(chain_stages)
 
-    if devices is not None and devices == 0:
-        topology = DeviceTopology.detect()
-    elif devices is not None:
-        topology = DeviceTopology.homogeneous(devices)
-    else:
+    if devices is None:
         topology = None  # plan_chain sizes it to the widest stage
+    elif isinstance(devices, DeviceTopology):
+        topology = devices
+    elif isinstance(devices, str):
+        try:
+            topology = DeviceTopology.parse(devices)
+        except ValueError as e:
+            raise FlowError(str(e)) from e
+    elif devices == 0:
+        topology = DeviceTopology.detect()
+    else:
+        topology = DeviceTopology.homogeneous(devices)
 
     plan = plan_chain(
         chain, target=target, policy=pol.name, backends=effective,

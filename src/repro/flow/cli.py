@@ -71,10 +71,13 @@ def _parse_args(argv: Optional[Sequence[str]]) -> argparse.Namespace:
     ap.add_argument("--cu-count", default="1",
                     help="CUs per stage: one int (chain-wide) or a "
                     "comma-separated per-stage vector")
-    ap.add_argument("--devices", type=int, default=None,
-                    help="device-topology size the stage CU groups are "
-                    "placed on (default: just enough for the widest "
-                    "stage; 0 = detect the local JAX device pool)")
+    ap.add_argument("--devices", default=None,
+                    help="device topology the stage CU groups are "
+                    "placed on: a size like '4', a heterogeneous spec "
+                    "like 'cpu:2,tpu:4' (each group priced against its "
+                    "own datasheet), or 0 to detect the local JAX "
+                    "device pool (default: just enough for the widest "
+                    "stage)")
     ap.add_argument("--n-eq", type=int, default=None)
     ap.add_argument("--dse", action="store_true",
                     help="sweep chain design points, adopt the best "
@@ -103,6 +106,18 @@ def _parse_args(argv: Optional[Sequence[str]]) -> argparse.Namespace:
                     "write the snapshot JSON (implies --run; validate "
                     "with python -m repro.metrics)")
     return ap.parse_args(argv)
+
+
+def _parse_devices(raw):
+    """``None`` -> None; ``"4"`` -> 4; ``"cpu:2,tpu:4"`` passes through
+    as a heterogeneous topology spec for ``build.compile`` to parse."""
+    if raw is None:
+        return None
+    raw = str(raw).strip()
+    try:
+        return int(raw)
+    except ValueError:
+        return raw
 
 
 def _parse_per_stage(raw, flag: str):
@@ -145,6 +160,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         prefetch_depth = _parse_per_stage(
             args.prefetch_depth, "--prefetch-depth"
         )
+        devices = _parse_devices(args.devices)
     except ValueError as e:
         print(f"error: {e}", file=sys.stderr)
         return 2
@@ -173,7 +189,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
             batch_elements=args.batch_elements,
             prefetch_depth=prefetch_depth,
             cu_count=cu_count,
-            devices=args.devices,
+            devices=devices,
             n_eq=args.n_eq,
             dse=args.dse,
             fuse=args.fuse,

@@ -284,6 +284,13 @@ class StagePlan:
     #: the topology device ids it owns (from the plan's placement).
     cu_count: int = 1
     devices: Tuple[int, ...] = (0,)
+    #: the stage's own batch size E_s (0 = the chain-wide E).  On a
+    #: heterogeneous topology each stage runs at the E natural to *its*
+    #: memory system; E_s always divides the chain E, and the executor
+    #: re-blocks (slice/concat) at handoffs where it changes.
+    batch_elements: int = 0
+    #: device kind the stage is placed on ("" = the plan target's).
+    kind: str = ""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -359,33 +366,52 @@ class ChainCost:
     #: no device-bound evidence for that stage; fall back to the
     #: structural ``contention`` count).  Empty = no profile consulted.
     contention_fit: Tuple[float, ...] = ()
+    #: per-stage re-block handoff cost (seconds per chain batch) billed
+    #: to the *consumer*: when adjacent stages run at different E_s --
+    #: or on different device kinds -- the handoff's bytes move through
+    #: the slower side's link before the consumer can start.  Empty =
+    #: no handoff re-blocks (the homogeneous shared-E legacy).
+    t_reblock: Tuple[float, ...] = ()
 
     def _contention(self, i: int) -> float:
         if self.contention_fit and self.contention_fit[i] > 0.0:
             return self.contention_fit[i]
         return float(self.contention[i]) if self.contention else 1.0
 
+    def _reblock(self, i: int) -> float:
+        return self.t_reblock[i] if self.t_reblock else 0.0
+
+    @property
+    def t_reblock_total(self) -> float:
+        """Chain-wide re-block seconds per batch (0 when E is shared)."""
+        return sum(self.t_reblock) if self.t_reblock else 0.0
+
     @property
     def t_serial(self) -> float:
         """Fully serial chain time per batch (no overlap anywhere)."""
-        return sum(c.t_serial for c in self.stages)
+        return sum(c.t_serial for c in self.stages) + self.t_reblock_total
 
     @property
     def t_back_to_back(self) -> float:
         """Stages sequential per batch, per-stage transfer overlap."""
-        return sum(c.t_pipelined for c in self.stages)
+        return (
+            sum(c.t_pipelined for c in self.stages) + self.t_reblock_total
+        )
 
     @property
     def stage_steady_times(self) -> Tuple[float, ...]:
         """Per-stage steady-state time under stage pipelining: the
         stage's roofline with its device terms scaled by how many
-        pipeline stages time-slice its devices.  The host link is billed
-        uncontended -- it is shared chain-wide in every schedule."""
+        pipeline stages time-slice its devices, plus the re-block cost
+        of its incoming handoffs (paid every batch before the stage can
+        run).  The host link is billed uncontended -- it is shared
+        chain-wide in every schedule."""
         out = []
         for i, c in enumerate(self.stages):
             k = self._contention(i) if self.pipelined_stages else 1
             out.append(
-                max(c.t_host, k * max(c.t_compute, c.t_hbm)) + c.t_overhead
+                max(c.t_host, k * max(c.t_compute, c.t_hbm))
+                + c.t_overhead + self._reblock(i)
             )
         return tuple(out)
 
@@ -553,6 +579,25 @@ class ChainPlan:
     #: what the cost-driven fusion pass decided (None when planning ran
     #: with fusion off); ``fusion.chain`` holds the fused chain.
     fusion: Optional["FusionSpec"] = None
+    #: per-stage batch size E_s (empty = every stage runs the chain E).
+    #: Each E_s divides the chain E and shards evenly on its stage's CU
+    #: group; the executor re-blocks at handoffs where E_s changes.
+    stage_batch_elements: Tuple[int, ...] = ()
+
+    def stage_e(self, i: int) -> int:
+        """Stage ``i``'s effective batch size (the chain E unless a
+        per-stage vector was planned)."""
+        if self.stage_batch_elements:
+            return self.stage_batch_elements[i]
+        return self.batch_elements
+
+    @property
+    def uniform_batch(self) -> bool:
+        """True when every stage runs the chain-wide E (no re-blocking
+        handoffs; the executor may use the single-mesh fast path)."""
+        return all(
+            es == self.batch_elements for es in self.stage_batch_elements
+        )
 
     @property
     def cu_count(self) -> int:
@@ -616,6 +661,22 @@ class ChainPlan:
             f"{sp.prefetch_depth}:{sp.cu_count}"
             for sp in self.stages
         ]
+        # heterogeneous extensions only when they change what executes,
+        # so every homogeneous shared-E plan keeps its historical
+        # signature (and its accumulated profile-store samples)
+        if not self.uniform_batch:
+            parts.append(
+                "E:" + ",".join(
+                    str(es) for es in self.stage_batch_elements
+                )
+            )
+        if len(self.placement.topology.groups) > 1:
+            parts.append(self.placement.topology.spec_string())
+            parts.append(
+                "G:" + ",".join(
+                    str(g) for g in self.placement.stage_group_indices
+                )
+            )
         return hashlib.sha1("|".join(parts).encode()).hexdigest()[:12]
 
     def report(self) -> str:
@@ -628,7 +689,8 @@ class ChainPlan:
             f"  E={self.batch_elements} elements/batch (co-sized)   "
             f"CUs=[{','.join(str(c) for c in self.cu_counts)}]   "
             f"feasible={'yes' if self.feasible else 'NO: ' + self.infeasible_reason}",
-            f"  channels: {self.channels_used}/{t.n_channels} used   "
+            f"  channels: {self.channels_used}/"
+            f"{self.placement.topology.total_channels(t)} used   "
             f"resident {self.resident_bytes / mib:.1f} MiB "
             f"of {t.usable_hbm_bytes / mib:.0f} MiB usable",
             f"  host stream {self.host_stream_bytes / mib:.1f} MiB/batch   "
@@ -669,7 +731,23 @@ class ChainPlan:
             )
         cc = self.cost
         lines.append("")
-        lines += self.placement.describe()
+        lines += self.placement.describe(
+            stage_names=[sp.name for sp in self.stages],
+            stage_elements=[
+                self.stage_e(i) for i in range(len(self.stages))
+            ],
+            stage_channels=[
+                sorted({c for b in sp.buffers for c in b.channels})
+                for sp in self.stages
+            ],
+            stage_kinds=[sp.kind or t.name for sp in self.stages],
+        )
+        if cc.t_reblock and any(r > 0 for r in cc.t_reblock):
+            vec = ",".join(f"{r * 1e3:.3f}" for r in cc.t_reblock)
+            lines.append(
+                f"  re-block handoffs: [{vec}] ms/batch per consumer "
+                "stage (E or kind changes across the boundary)"
+            )
         if cc.contention_fit:
             vec = ",".join(
                 f"{k:.2f}" if k > 0.0 else "-" for k in cc.contention_fit
@@ -705,6 +783,41 @@ class ChainPlan:
         return "\n".join(lines)
 
 
+def snap_stage_elements(e: int, requested: int, cu: int) -> int:
+    """Snap a stage's requested E_s to the largest value that divides
+    the chain batch ``e``, shards evenly over ``cu`` devices, and does
+    not exceed the request.  Falls back to ``cu`` (the smallest legal
+    sub-batch) and finally to ``e`` itself -- so when ``cu`` divides
+    ``e`` a legal E_s always exists."""
+    e, cu = max(1, int(e)), max(1, int(cu))
+    req = max(1, min(int(requested), e))
+    best = 0
+    d = 1
+    while d * d <= e:
+        if e % d == 0:
+            for cand in (d, e // d):
+                if cand <= req and cand % cu == 0:
+                    best = max(best, cand)
+        d += 1
+    if best:
+        return best
+    return cu if e % cu == 0 else e
+
+
+def _scale_cost(cost: CostBreakdown, m: int) -> CostBreakdown:
+    """A stage running ``m`` sub-batches per chain batch pays every cost
+    term ``m`` times (including dispatch overhead -- sub-batching is not
+    free, which is exactly the tension the per-stage-E search prices)."""
+    if m <= 1:
+        return cost
+    return dataclasses.replace(
+        cost,
+        t_compute=cost.t_compute * m, t_hbm=cost.t_hbm * m,
+        t_host=cost.t_host * m, t_overhead=cost.t_overhead * m,
+        t_serial=cost.t_serial * m, t_pipelined=cost.t_pipelined * m,
+    )
+
+
 def plan_chain(
     chain: ProgramChain,
     *,
@@ -716,6 +829,8 @@ def plan_chain(
     cu_count: Union[int, Sequence[int]] = 1,
     topology: Optional[DeviceTopology] = None,
     placement: Optional[PlacementPlan] = None,
+    stage_groups: Optional[Sequence[int]] = None,
+    stage_batch_elements: Optional[Sequence[int]] = None,
     n_eq: Optional[int] = None,
     channel_bytes: Optional[int] = None,
     profile=None,
@@ -756,6 +871,16 @@ def plan_chain(
     ``_sched_cache`` (keyed by stage index and scalar width) lets sweeps
     reuse staged-backend schedules across design points instead of
     re-partitioning per candidate.
+
+    On a heterogeneous topology (``DeviceTopology.parse("cpu:2,tpu:4")``
+    or ``from_jax`` over a mixed pool) every stage is priced against the
+    datasheet of the kind group it lands on: ``stage_groups`` pins
+    stages to groups (default: least-loaded), buffers draw channel ids
+    from the owning group's pseudo-channels, and ``stage_batch_elements``
+    gives each stage its own E_s (snapped to divide the chain E and
+    shard on its group).  Handoffs whose E_s -- or device kind --
+    changes are priced as an explicit re-block term billed to the
+    consumer (bytes through the slower side's link).
     """
     # local import: dse depends on this module for chain exploration
     from .dse import predict_cost
@@ -772,6 +897,11 @@ def plan_chain(
             raise ValueError(
                 "an explicit placement is per-stage and cannot survive "
                 "fusion; pass a topology instead"
+            )
+        if stage_groups is not None or stage_batch_elements is not None:
+            raise ValueError(
+                "per-stage groups/batch sizes cannot survive fusion; "
+                "plan the fused chain first, then pin stages"
             )
         return fuse_chain_auto(
             chain,
@@ -823,9 +953,16 @@ def plan_chain(
                 raise ValueError(f"need {n_stages} prefetch depths")
         if topology is None:
             topology = DeviceTopology.homogeneous(max(1, max(cus)))
-        place = place_chain(topology, cus, depth_vec)
+        place = place_chain(
+            topology, cus, depth_vec, stage_groups=stage_groups
+        )
     depths = list(place.prefetch_depths)
     any_prefetch = any(d > 0 for d in depths)
+    # per-stage pricing targets: each stage is costed (and its buffers
+    # burst-padded, channel-mapped, VMEM-bounded) against the datasheet
+    # of the kind group that owns it; target-less groups (the
+    # homogeneous legacy) fall back to the plan-wide target
+    stage_ts = [place.stage_target(i, target) for i in range(n_stages)]
 
     pad = 0
     blk_align = 1
@@ -841,9 +978,9 @@ def plan_chain(
         # all caps are passed so a small-cap stage cannot stay starved
         caps = [
             layout.vmem_block_elements(
-                s.program, target, bytes_per_scalar=bps
+                s.program, stage_ts[i], bytes_per_scalar=bps
             )
-            for s in chain.stages
+            for i, s in enumerate(chain.stages)
         ]
         blk_align = max(caps)
         e, pad = layout.pad_batch_for_block(
@@ -870,25 +1007,57 @@ def plan_chain(
         pad -= trim
     n_batches = max(1, n_eq // e) if n_eq else None
 
-    alloc = layout.ChannelAllocator(target.n_channels)
+    # per-stage E_s: every stage runs the chain E unless a vector was
+    # requested; requests snap to divide E and shard on the stage's CU
+    # group (the executor re-blocks at handoffs where E_s changes)
+    if stage_batch_elements is not None:
+        if len(stage_batch_elements) != n_stages:
+            raise ValueError(
+                f"need {n_stages} stage batch sizes, got "
+                f"{len(stage_batch_elements)}"
+            )
+        stage_es = [
+            snap_stage_elements(e, req, place.stages[i].cu_count)
+            for i, req in enumerate(stage_batch_elements)
+        ]
+    else:
+        stage_es = [e] * n_stages
+
+    # placement-aware channel assignment: one round-robin allocator per
+    # kind group, offset into a global id space, so every stream draws
+    # from the pseudo-channels of the group owning its producing stage
+    # (a single-group topology degenerates to the legacy shared
+    # allocator exactly)
+    allocs: Dict[int, layout.ChannelAllocator] = {}
+    ch_base = 0
+    for gi, gspec in enumerate(place.topology.groups):
+        g_t = gspec.target if gspec.target is not None else target
+        allocs[gi] = layout.ChannelAllocator(g_t.n_channels, base=ch_base)
+        ch_base += g_t.n_channels
     shared_ops = chain.shared_operands()
     placed_shared: Dict[str, BufferSpec] = {}
     resident_spec: Dict[Tuple[int, str], BufferSpec] = {}
     stage_plans: List[StagePlan] = []
     max_stage_ws = 0
+    max_stage_ws_vmem = target.vmem_bytes
 
+    reblock: List[float] = [0.0] * n_stages
     for i, stage in enumerate(chain.stages):
         prog = stage.program
         backend = backends[i]
         depth = depths[i]
+        stage_t = stage_ts[i]
+        e_s = stage_es[i]
+        m = max(1, e // e_s)          # sub-batches per chain batch
         in_repl = depth + 2 if depth > 0 else 1
         io_repl = 2 if any_prefetch else 1
+        alloc = allocs[place.stage_group_index(i)]
         bufs: List[BufferSpec] = []
 
         def add(name, node, role, replicas, group=""):
             b = layout.make_buffer(
-                name, node, role, replicas, target=target,
-                bytes_per_scalar=bps, batch_elements=e,
+                name, node, role, replicas, target=stage_t,
+                bytes_per_scalar=bps, batch_elements=e_s,
                 alloc=alloc, group=group,
             )
             bufs.append(b)
@@ -928,10 +1097,10 @@ def plan_chain(
                 for k, node in enumerate(streamed):
                     add(f"{stage.name}.{g.name}.s{k}", node, "inter", 1,
                         group=g.name)
-            max_stage_ws = max(
-                max_stage_ws,
-                max(g.working_set(bps) for g in sched.groups),
-            )
+            ws = max(g.working_set(bps) for g in sched.groups)
+            if ws > max_stage_ws:
+                max_stage_ws = ws
+                max_stage_ws_vmem = stage_t.vmem_bytes
 
         # stage cost: host link carries only this stage's in/out streams;
         # HBM carries those plus resident reads/writes and 2x inter
@@ -939,8 +1108,21 @@ def plan_chain(
         for in_name, (p, out_name) in chain.resolved[i].items():
             # consumer-side read of a resident buffer placed by stage p
             # (the write half is already billed to the producer's hbm
-            # count above, via the 2x resident rule on its own buffer)
-            stage_hbm += resident_spec[(p, out_name)].batch_bytes
+            # count above, via the 2x resident rule on its own buffer);
+            # read at *this* stage's E_s -- one sub-batch per dispatch
+            spec = resident_spec[(p, out_name)]
+            stage_hbm += spec.padded_bytes * e_s
+            # re-block handoff: when the boundary changes E_s or device
+            # kind, the chain batch's bytes cross the slower side's
+            # link before this stage can consume them
+            if stage_es[p] != e_s or place.stage_kind(p) != place.stage_kind(i):
+                hand_bytes = spec.padded_bytes * e
+                p_t, i_t = stage_ts[p], stage_t
+                if place.stage_kind(p) != place.stage_kind(i):
+                    bw = min(p_t.host_link_bw, i_t.host_link_bw)
+                else:
+                    bw = min(p_t.hbm_bw, i_t.hbm_bw)
+                reblock[i] += hand_bytes / bw if bw > 0 else 0.0
         # a producer's resident buffer counts write-only for itself
         stage_hbm -= sum(
             b.batch_bytes for b in bufs if b.role == "resident"
@@ -955,19 +1137,22 @@ def plan_chain(
             placed_shared[n] for n in prog.inputs
             if n in placed_shared
         ]
-        cost = predict_cost(
-            target, policy=pol.name, batch_elements=e,
-            flops_per_element=prog.total_flops(),
-            host_bytes=host_stream_bytes(bufs),
-            hbm_bytes=stage_hbm,
-            channels_used=channels_used(touched),
-            prefetch_depth=depth, cu_count=place.stages[i].cu_count,
-            n_batches=n_batches,
+        cost = _scale_cost(
+            predict_cost(
+                stage_t, policy=pol.name, batch_elements=e_s,
+                flops_per_element=prog.total_flops(),
+                host_bytes=host_stream_bytes(bufs),
+                hbm_bytes=stage_hbm,
+                channels_used=channels_used(touched),
+                prefetch_depth=depth, cu_count=place.stages[i].cu_count,
+                n_batches=n_batches,
+            ),
+            m,
         )
         blk_cap = layout.vmem_block_elements(
-            prog, target, bytes_per_scalar=bps
+            prog, stage_t, bytes_per_scalar=bps
         )
-        blk = layout.largest_divisor_leq(e, blk_cap)
+        blk = layout.largest_divisor_leq(e_s, blk_cap)
         stage_plans.append(
             StagePlan(
                 name=stage.name, backend=backend, prefetch_depth=depth,
@@ -979,6 +1164,8 @@ def plan_chain(
                 ),
                 cu_count=place.stages[i].cu_count,
                 devices=place.stages[i].devices,
+                batch_elements=e_s,
+                kind=stage_t.name,
             )
         )
 
@@ -993,11 +1180,44 @@ def plan_chain(
             fill_batches=pipeline.fill_batches,
             n_batches=n_batches,
             contention=place.contention,
+            t_reblock=(
+                tuple(reblock) if any(r > 0 for r in reblock) else ()
+            ),
         ),
         batch_pad_elements=pad,
         pipeline=pipeline,
+        stage_batch_elements=(
+            tuple(stage_es) if any(es != e for es in stage_es) else ()
+        ),
     )
-    worst_blk = max(sp.block_working_set_bytes for sp in stage_plans)
+    # VMEM bounds are per stage against the stage's own datasheet
+    # (identical to the plan-wide target on a homogeneous topology)
+    worst_blk, worst_blk_vmem = 0, target.vmem_bytes
+    for i, sp in enumerate(stage_plans):
+        if sp.block_working_set_bytes > worst_blk:
+            worst_blk = sp.block_working_set_bytes
+            worst_blk_vmem = stage_ts[i].vmem_bytes
+    # resident HBM is a per-group budget: each kind group holds only
+    # the buffers of the stages placed on it
+    group_resident: Dict[int, int] = {}
+    for i, sp in enumerate(stage_plans):
+        gi = place.stage_group_index(i)
+        group_resident[gi] = group_resident.get(gi, 0) + sum(
+            b.resident_bytes for b in sp.buffers
+        )
+    resident_excess = ""
+    for gi, rb in sorted(group_resident.items()):
+        g_t = place.topology.groups[gi].target or target
+        if rb > g_t.usable_hbm_bytes:
+            resident_excess = (
+                f"resident {rb / 2**20:.0f} MiB exceeds "
+                f"usable HBM {g_t.usable_hbm_bytes / 2**20:.0f} MiB"
+            )
+            if len(place.topology.groups) > 1:
+                resident_excess += (
+                    f" on group {gi} ({place.topology.groups[gi].kind})"
+                )
+            break
     feasible, reason = True, ""
     if e % shard:
         feasible = False
@@ -1005,23 +1225,20 @@ def plan_chain(
             f"batch E={e} does not shard evenly over the stage CU "
             f"groups (needs a multiple of {shard})"
         )
-    elif plan.resident_bytes > target.usable_hbm_bytes:
+    elif resident_excess:
         feasible = False
-        reason = (
-            f"resident {plan.resident_bytes / 2**20:.0f} MiB exceeds "
-            f"usable HBM {target.usable_hbm_bytes / 2**20:.0f} MiB"
-        )
-    elif worst_blk > target.vmem_bytes:
+        reason = resident_excess
+    elif worst_blk > worst_blk_vmem:
         feasible = False
         reason = (
             f"stage block working set {worst_blk} B exceeds on-chip "
-            f"{target.vmem_bytes} B"
+            f"{worst_blk_vmem} B"
         )
-    elif max_stage_ws > target.vmem_bytes:
+    elif max_stage_ws > max_stage_ws_vmem:
         feasible = False
         reason = (
             f"stage working set {max_stage_ws} B exceeds on-chip "
-            f"{target.vmem_bytes} B"
+            f"{max_stage_ws_vmem} B"
         )
     if not feasible:
         plan = dataclasses.replace(

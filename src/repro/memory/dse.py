@@ -616,6 +616,144 @@ def _search_stage_placements(
     return [(cus, depths) for _, cus, depths in kept]
 
 
+def _search_hetero_placements(
+    group_costs: Dict[int, Sequence[CostBreakdown]],
+    space: ChainDesignSpace,
+    topology,
+    batch_elements: int,
+) -> List[Tuple[Tuple[int, ...], Tuple[int, ...], Tuple[int, ...],
+                Tuple[int, ...]]]:
+    """Branch-and-bound over joint per-stage ``(group, cu, E_s)``
+    assignments on a heterogeneous topology.
+
+    ``group_costs[gi]`` holds the per-stage cost terms of a reference
+    plan with every stage pinned to kind group ``gi`` at ``cu=1`` and
+    the chain E -- so each stage's candidate options are priced against
+    the datasheet it would actually land on.  An option's proxy time is
+    ``max(t_host, dev/cu) + m * t_overhead`` with ``m = E / E_s`` (a
+    smaller E_s buys nothing in the proxy but lets small-memory groups
+    pass the exact planner's residency/VMEM checks, which is why it is
+    an axis at all).  The prune is the same monotone argument as the
+    homogeneous search: every completed score is bounded below by the
+    partial per-stage max.  Depth shapes are attached at the leaves and
+    re-block costs are left to the exact planner -- the frontier is a
+    menu, ``plan_chain`` is the judge.  Returns up to ``max_placements``
+    ``(cu_counts, prefetch_depths, stage_groups, stage_elements)``.
+    """
+    from . import chain as chain_mod  # lazy: chain imports predict_cost
+    from .placement import place_chain
+
+    if not group_costs:
+        return []
+    n = len(next(iter(group_costs.values())))
+    e = batch_elements
+    divisors = sorted({max(1, int(d)) for d in space.batch_divisors})
+
+    # per-stage option menu: (proxy time, group, cu, E_s), best first,
+    # truncated so deep chains cannot blow up the search tree
+    opts: List[List[Tuple[float, int, int, int]]] = []
+    for i in range(n):
+        o: Dict[Tuple[int, int, int], float] = {}
+        for gi, costs in sorted(group_costs.items()):
+            c = costs[i]
+            size = topology.groups[gi].n_devices
+            dev = max(c.t_compute, c.t_hbm)
+            for cu in sorted(set(space.cu_counts)):
+                if cu < 1 or cu > size or e % cu:
+                    continue
+                for d in divisors:
+                    e_s = chain_mod.snap_stage_elements(
+                        e, max(1, e // d), cu
+                    )
+                    m = max(1, e // e_s)
+                    t = max(c.t_host, dev / cu) + m * c.t_overhead
+                    key = (gi, cu, e_s)
+                    if key not in o or t < o[key]:
+                        o[key] = t
+        lst = sorted((t, gi, cu, es) for (gi, cu, es), t in o.items())
+        if not lst:
+            gi = min(group_costs)
+            c = group_costs[gi][i]
+            lst = [(
+                max(c.t_host, max(c.t_compute, c.t_hbm)) + c.t_overhead,
+                gi, 1, e,
+            )]
+        opts.append(lst[:12])
+
+    def score(
+        gis: Tuple[int, ...], cus: Tuple[int, ...],
+        es: Tuple[int, ...], pipelined: bool,
+    ) -> float:
+        place = place_chain(
+            topology, cus, 1, n_stages=n, stage_groups=gis
+        )
+        cont = place.contention
+        b2b, steady = 0.0, 0.0
+        for i in range(n):
+            c = group_costs[gis[i]][i]
+            m = max(1, e // es[i])
+            dev = max(c.t_compute, c.t_hbm) / place.cu_counts[i]
+            b2b += max(c.t_host, dev) + m * c.t_overhead
+            steady = max(
+                steady, max(c.t_host, cont[i] * dev) + m * c.t_overhead
+            )
+        return min(b2b, steady) if pipelined and n > 1 else b2b
+
+    K = max(1, space.max_placements)
+    best: List[Tuple[float, Tuple[int, ...], Tuple[int, ...],
+                     Tuple[int, ...]]] = []
+    visited = 0
+
+    def dfs(
+        i: int, gis: List[int], cus: List[int], es: List[int],
+        partial_max: float,
+    ) -> None:
+        nonlocal visited
+        visited += 1
+        if visited > space.max_search_nodes:
+            return
+        if len(best) >= K and partial_max >= best[-1][0]:
+            return  # monotone prune, as in the homogeneous search
+        if i == n:
+            g, c, s = tuple(gis), tuple(cus), tuple(es)
+            best.append((score(g, c, s, pipelined=True), g, c, s))
+            best.sort(key=lambda x: x[0])
+            del best[K:]
+            return
+        for t, gi, cu, e_s in opts[i]:
+            gis.append(gi); cus.append(cu); es.append(e_s)
+            dfs(i + 1, gis, cus, es, max(partial_max, t))
+            gis.pop(); cus.pop(); es.pop()
+
+    dfs(0, [], [], [], 0.0)
+
+    positive = sorted({d for d in space.prefetch_depths if d > 0})
+    shapes: List[Tuple[Tuple[int, ...], bool]] = []
+    if 0 in space.prefetch_depths:
+        shapes.append(((0,) * n, False))
+    if positive:
+        shapes.append(((max(positive),) + (0,) * (n - 1), False))
+        shapes += [((d,) * n, True) for d in positive]
+    if not shapes:
+        shapes = [((0,) * n, False)]
+    scored = [
+        (score(gis, cus, es, pipelined), cus, depths, gis, es)
+        for _, gis, cus, es in best
+        for depths, pipelined in shapes
+    ]
+    scored.sort(key=lambda x: x[0])
+    buckets = [
+        [s for s in scored if s[2] == depths] for depths, _ in shapes
+    ]
+    kept: List = []
+    while len(kept) < K and any(buckets):
+        for b in buckets:
+            if b and len(kept) < K:
+                kept.append(b.pop(0))
+    kept.sort(key=lambda x: x[0])
+    return [(cus, depths, gis, es) for _, cus, depths, gis, es in kept]
+
+
 def explore_chain(
     chain: "chain_mod.ProgramChain",
     *,
@@ -654,6 +792,13 @@ def explore_chain(
     fill/drain), so replication and stage pipelining competing for the
     same devices is weighed exactly as the executor delivers it.
 
+    On a heterogeneous topology (kind groups with their own datasheets)
+    the joint search instead co-varies per-stage ``(group, cu, E_s)``
+    via :func:`_search_hetero_placements`; every kind group's
+    single-group uniform grid is also swept explicitly, so the winner is
+    never worse than the best homogeneous-restricted plan on the same
+    device budget.
+
     ``measure_top`` verifies the k best feasible candidates whose
     planned backends match the chain's compiled ones by running the real
     ``run_chain`` driver (others cannot be measured as-planned).
@@ -684,6 +829,7 @@ def explore_chain(
     space = space or ChainDesignSpace()
     if topology is None:
         topology = DeviceTopology.homogeneous(max(1, max(space.cu_counts)))
+    hetero = len(topology.groups) > 1
 
     fusion_spec = None
     if fuse == "auto" or (
@@ -726,12 +872,19 @@ def explore_chain(
         e_cands = sorted({max(1, auto_e // d) for d in space.batch_divisors})
         for backends in combos:
             for e in e_cands:
-                def make_plan_at(cus, depths):
+                def make_plan_at(cus, depths, groups=None, stage_es=None):
                     return chain_mod.plan_chain(
                         chain, target=target, policy=policy,
                         backends=backends, batch_elements=e,
                         prefetch_depth=list(depths), cu_count=list(cus),
                         topology=topology, n_eq=n_eq,
+                        stage_groups=(
+                            list(groups) if groups is not None else None
+                        ),
+                        stage_batch_elements=(
+                            list(stage_es) if stage_es is not None
+                            else None
+                        ),
                         _sched_cache=sched_cache,
                     )
 
@@ -739,23 +892,61 @@ def explore_chain(
                 # placement search (device terms scale as 1/cu)
                 ref = make_plan_at((1,) * n_stages, (1,) * n_stages)
                 vectors = {
-                    ((1,) * n_stages, (1,) * n_stages): ref,
+                    ((1,) * n_stages, (1,) * n_stages, None, None): ref,
                 }
                 # the classic chain-wide uniform sweep is kept verbatim
                 for depth in space.prefetch_depths:
                     for cu in space.cu_counts:
                         cu = max(1, min(cu, topology.n_devices))
                         vectors.setdefault(
-                            ((cu,) * n_stages, (depth,) * n_stages), None
+                            ((cu,) * n_stages, (depth,) * n_stages,
+                             None, None),
+                            None,
                         )
-                # plus the joint per-stage frontier over the topology
-                for cus, depths in _search_stage_placements(
-                    [sp.cost for sp in ref.stages], space, topology, e
-                ):
-                    vectors.setdefault((cus, depths), None)
-                for (cus, depths), plan in vectors.items():
+                if hetero:
+                    # per-group references: every stage priced on each
+                    # kind group's own datasheet at cu=1
+                    group_refs = {
+                        gi: make_plan_at(
+                            (1,) * n_stages, (1,) * n_stages,
+                            groups=(gi,) * n_stages,
+                        )
+                        for gi in range(len(topology.groups))
+                    }
+                    # single-group-restricted uniforms are explicit
+                    # candidates, so the heterogeneous winner can never
+                    # rank behind the best homogeneous-restricted plan
+                    # on the same device budget
+                    for gi, gspec in enumerate(topology.groups):
+                        for depth in space.prefetch_depths:
+                            for cu in space.cu_counts:
+                                cu = max(1, min(cu, gspec.n_devices))
+                                vectors.setdefault(
+                                    ((cu,) * n_stages,
+                                     (depth,) * n_stages,
+                                     (gi,) * n_stages, None),
+                                    None,
+                                )
+                    # plus the joint per-stage (group, cu, E_s) frontier
+                    for cus, depths, gis, es in _search_hetero_placements(
+                        {
+                            gi: [sp.cost for sp in r.stages]
+                            for gi, r in group_refs.items()
+                        },
+                        space, topology, e,
+                    ):
+                        vectors.setdefault((cus, depths, gis, es), None)
+                else:
+                    # the joint per-stage frontier over the topology
+                    for cus, depths in _search_stage_placements(
+                        [sp.cost for sp in ref.stages], space, topology, e
+                    ):
+                        vectors.setdefault((cus, depths, None, None), None)
+                for (cus, depths, gis, es), plan in vectors.items():
                     if plan is None:
-                        plan = make_plan_at(cus, depths)
+                        plan = make_plan_at(
+                            cus, depths, groups=gis, stage_es=es
+                        )
                     if fusion_spec is not None:
                         plan = dataclasses.replace(
                             plan, fusion=fusion_spec

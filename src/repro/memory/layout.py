@@ -79,17 +79,27 @@ class ChannelAllocator:
     feasibility is checked globally by the DSE, not here.  One take never
     repeats a channel (no double-booking within one replica set); chain
     planning shares a single allocator across all stages so no two
-    stages' hot streams pile onto channel 0."""
+    stages' hot streams pile onto channel 0.
 
-    def __init__(self, n_channels: int):
+    ``base`` offsets the allotted ids into a global channel namespace:
+    heterogeneous chain planning runs one allocator per device group, so
+    a stream lands on the pseudo-channels of the group that owns its
+    producing stage (group 0 gets ids ``[0, n0)``, group 1 gets
+    ``[n0, n0+n1)``, ...)."""
+
+    def __init__(self, n_channels: int, base: int = 0):
         self.n = n_channels
+        self.base = base
         self.next = 0
 
     def take(self, count: int) -> Tuple[int, ...]:
         """Allot the next ``count`` channel ids round-robin (capped at
         the channel count -- wide buffers stripe what exists)."""
         count = max(1, count)
-        ids = tuple((self.next + i) % self.n for i in range(min(count, self.n)))
+        ids = tuple(
+            self.base + (self.next + i) % self.n
+            for i in range(min(count, self.n))
+        )
         self.next = (self.next + count) % self.n
         return ids
 

@@ -178,6 +178,47 @@ def placement_meshes(
     return groups
 
 
+def reblock_batched_fn(
+    fn: Callable[[Dict[str, Any]], Dict[str, Any]],
+    element_keys: Sequence[str],
+    sub_elements: int,
+) -> Callable[[Dict[str, Any]], Dict[str, Any]]:
+    """Re-blocking handoff: run a batched dict->dict stage fn at its own
+    (smaller) E_s inside a chain batch of E elements.
+
+    The wrapper slices every element-keyed array along the leading batch
+    axis into ``sub_elements`` chunks, runs ``fn`` per chunk (shared
+    operands pass through whole), and concatenates the outputs back to
+    the chain batch -- all on device, so the handoff stays HBM-resident.
+    Elements are independent along the batch axis (the same property the
+    element-sharded meshes rely on), so the result is bitwise-equal to
+    one full-batch call; only the dispatch granularity changes.  A batch
+    no larger than ``sub_elements`` calls ``fn`` untouched."""
+    import jax.numpy as jnp
+
+    keys = frozenset(element_keys)
+    sub = max(1, int(sub_elements))
+
+    def reblocked(env: Dict[str, Any]) -> Dict[str, Any]:
+        n = next(
+            (env[k].shape[0] for k in env if k in keys), None
+        )
+        if n is None or n <= sub:
+            return fn(env)
+        outs = []
+        for lo in range(0, n, sub):
+            outs.append(fn({
+                k: (v[lo:lo + sub] if k in keys else v)
+                for k, v in env.items()
+            }))
+        return {
+            k: jnp.concatenate([o[k] for o in outs], axis=0)
+            for k in outs[0]
+        }
+
+    return reblocked
+
+
 def stage_skews(depths: Sequence[int]) -> List[int]:
     """How many batches each stage lags behind stage 0.
 

@@ -70,10 +70,19 @@ class PlanCache:
         Accepts exactly :func:`repro.flow.build.compile`'s keyword
         arguments; on a miss they are forwarded verbatim and the result
         is cached under the call's key.
+
+        ``profile=`` threads through warm hits too: the key excludes it
+        (a profile store refines ranking, it does not change what is
+        being compiled), so a hit re-applies the store's *current*
+        correction to the cached DSE ranking -- traced runs recorded
+        since the entry was compiled still reach the served candidates.
+        If the refit flips the feasible winner, the entry is stale and
+        is recompiled in place.
         """
         key = self.key(source, **compile_kwargs)
         system = self._systems.get(key)
-        if system is not None:
+        if system is not None and self._still_fresh(
+                system, compile_kwargs.get("profile")):
             self.hits += 1
             self._bump("hit")
             return system
@@ -87,6 +96,29 @@ class PlanCache:
         while len(self._systems) > self.max_systems:
             self._systems.pop(next(iter(self._systems)))
         return system
+
+    def _still_fresh(self, system: build.CompiledSystem,
+                     profile) -> bool:
+        """Re-apply the profile store's current correction to a cached
+        entry's DSE ranking (in place).  True unless the refit promotes
+        a *different* feasible plan to the top -- then the cached system
+        no longer matches what a fresh compile would serve."""
+        if profile is None or not system.candidates:
+            return True
+        from ..memory import dse as dse_mod
+        from ..trace.profile import ProfileStore
+
+        store = ProfileStore.open(profile)
+        if store is None:
+            return True
+        dse_mod.apply_correction(
+            system.candidates, store.correction(system.target.name)
+        )
+        winner = next(
+            (c for c in system.candidates if c.plan.feasible), None
+        )
+        return (winner is None
+                or winner.plan.signature == system.plan.signature)
 
     def _bump(self, what: str) -> None:
         if self._m_events is not None:

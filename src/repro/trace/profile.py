@@ -21,6 +21,15 @@ refits only see current-epoch samples, and recording prunes the rest --
 so bumping the cost model orphans all pre-bump feedback instead of
 letting it steer the new model.  Store files written before epochs
 existed load fine; their unstamped samples are simply ignored.
+
+The epoch is a declared version, and planner edits rarely remember to
+bump it -- so samples are *also* stamped with :func:`plan_code_digest`,
+a digest of the planner's own source (``memory.chain`` / ``memory.dse``
+/ ``memory.pipeline``).  When the plan *code* changes under an
+unchanged ``COST_MODEL_VERSION``, queries stop surfacing the old
+samples and recording prunes them.  Samples without a ``src`` stamp
+(older store files) are tolerated: the digest gates code drift, it does
+not orphan history that predates the stamp.
 """
 from __future__ import annotations
 
@@ -48,6 +57,34 @@ def cost_model_epoch() -> str:
     except Exception:  # pragma: no cover - partial installs
         return "v0"
     return f"v{COST_MODEL_VERSION}"
+
+
+_PLAN_CODE_DIGEST: Optional[str] = None
+
+
+def plan_code_digest() -> str:
+    """Digest of the planner's own source code (``memory.chain``,
+    ``memory.dse``, ``memory.pipeline``), cached per process.  A sample
+    calibrates the model *as coded*: when the planner changes without a
+    ``COST_MODEL_VERSION`` bump, this digest changes and the old
+    feedback ages out anyway."""
+    global _PLAN_CODE_DIGEST
+    if _PLAN_CODE_DIGEST is None:
+        import hashlib
+        import inspect
+
+        try:
+            from ..memory import chain, dse, pipeline  # lazy: no cycle
+
+            blob = "\n".join(
+                inspect.getsource(m) for m in (chain, dse, pipeline)
+            )
+            _PLAN_CODE_DIGEST = hashlib.sha1(
+                blob.encode()
+            ).hexdigest()[:12]
+        except Exception:  # pragma: no cover - partial installs
+            _PLAN_CODE_DIGEST = "src0"
+    return _PLAN_CODE_DIGEST
 
 
 def default_profile_path() -> str:
@@ -88,13 +125,19 @@ class ProfileStore:
 
     def __init__(self, path: Optional[str] = None,
                  fingerprint: Optional[str] = None,
-                 epoch: Optional[str] = None):
+                 epoch: Optional[str] = None,
+                 src: Optional[str] = None):
         self.path = path or default_profile_path()
         self.fingerprint = fingerprint or machine_fingerprint()
         #: samples are stamped with this at record time and only
         #: same-epoch samples feed queries/refits (tests override it to
         #: simulate a cost-model bump)
         self.epoch = epoch or cost_model_epoch()
+        #: the planner-source digest stamped alongside the epoch;
+        #: samples carrying a *different* digest are stale even when the
+        #: declared epoch never moved (tests override it to simulate a
+        #: silent planner edit)
+        self.src = src or plan_code_digest()
         self.data: Dict[str, Any] = {"version": _VERSION, "entries": {}}
         self._load()
 
@@ -145,12 +188,13 @@ class ProfileStore:
     def record(self, target_name: str, signature: str,
                samples: List[Dict[str, Any]], *, save: bool = True) -> int:
         """Append samples under (this machine, target, signature),
-        stamped with the current code epoch; FIFO-bounded.  Stale-epoch
-        samples already in the bucket are pruned on the way (the file
-        shrinks back as post-bump feedback arrives).  Returns how many
-        were accepted."""
+        stamped with the current code epoch and planner-source digest;
+        FIFO-bounded.  Samples already in the bucket that carry a stale
+        epoch or a mismatched source digest are pruned on the way (the
+        file shrinks back as post-change feedback arrives).  Returns how
+        many were accepted."""
         good = [
-            dict(s, epoch=self.epoch) for s in samples
+            dict(s, epoch=self.epoch, src=self.src) for s in samples
             if isinstance(s.get("predicted_s"), (int, float))
             and isinstance(s.get("measured_s"), (int, float))
             and s["predicted_s"] > 0 and s["measured_s"] > 0
@@ -162,6 +206,7 @@ class ProfileStore:
         bucket = [
             s for s in entries.get(key, ())
             if isinstance(s, dict) and s.get("epoch") == self.epoch
+            and s.get("src", self.src) == self.src
         ]
         entries[key] = bucket
         bucket.extend(good)
@@ -201,13 +246,16 @@ class ProfileStore:
         signature when it has history, otherwise everything recorded for
         the target (a new plan still benefits from the machine's overall
         bias).  Samples stamped with another epoch -- or none, from a
-        store file predating epochs -- never surface: the correction
-        refit must not be steered by an obsolete cost model."""
+        store file predating epochs -- never surface, and neither do
+        samples whose planner-source digest no longer matches the code
+        that is running: the correction refit must not be steered by an
+        obsolete cost model."""
 
         def live(v) -> List[Dict[str, Any]]:
             return [
                 s for s in v
                 if isinstance(s, dict) and s.get("epoch") == self.epoch
+                and s.get("src", self.src) == self.src
             ]
 
         entries = self.data["entries"]

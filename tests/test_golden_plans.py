@@ -98,3 +98,22 @@ def test_golden_chain_sharded_placement():
         n_eq=1 << 12,
     )
     _check("chain_cfd_p5_sharded_alveo.txt", plan.report())
+
+
+def test_golden_chain_hetero_placement():
+    """Locks the heterogeneous report: per-stage (kind, E, channels)
+    lines in the placement section, per-group channel-id bases (cpu-host
+    ids before the alveo block), and the re-block handoff line for the
+    E- and kind-crossing 0->1 boundary."""
+    from repro.memory.placement import DeviceTopology
+
+    chain = operators.build_cfd_chain(5)
+    plan = mchain.plan_chain(
+        chain, target=channels.ALVEO_U280, policy="float32",
+        batch_elements=256, prefetch_depth=(2, 1, 1),
+        cu_count=(1, 2, 1),
+        topology=DeviceTopology.parse("cpu:1,alveo:2"),
+        stage_groups=(0, 1, 1), stage_batch_elements=(64, 256, 256),
+        n_eq=1 << 12,
+    )
+    _check("chain_cfd_p5_hetero_alveo.txt", plan.report())

@@ -1,0 +1,483 @@
+"""Heterogeneous topology: per-device kind derivation, kind-aware
+placement + pricing, per-stage E with re-block handoffs, and the
+placement-aware channel assignment.
+
+Acceptance (ISSUE 10): ``from_jax`` derives kinds per device and rejects
+unsupported mixes; ``explore_chain`` over a mixed 2-kind topology never
+ranks behind the best homogeneous-restricted plan on the same device
+budget; re-blocked heterogeneous execution is bitwise-equal to the
+single-mesh serial reference for random per-stage E vectors (hypothesis
+property with a deterministic fallback); a forced-2-kind subprocess run
+executes the cross-kind handoff on a real 2-device mesh.
+"""
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from conftest import subprocess_env
+from repro.cfd import operators, simulation
+from repro.core import dsl
+from repro.flow import build
+from repro.flow import cli as flow_cli
+from repro.memory import chain as mchain
+from repro.memory import channels, dse
+from repro.memory.placement import (DeviceTopology, PlacementError,
+                                    resolve_kind_target)
+
+
+# ---------------------------------------------------------------------------
+# from_jax: per-device kind derivation (the satellite bugfix)
+# ---------------------------------------------------------------------------
+
+
+class _FakeDev:
+    """Just enough of a jax.Device for from_jax: a .platform."""
+
+    def __init__(self, platform):
+        self.platform = platform
+
+
+def test_from_jax_mixed_pool_derives_per_device_kinds():
+    """Regression: the topology used to assume devs[0].platform for the
+    whole fleet; a mixed pool must become one group per kind, each
+    carrying its own datasheet."""
+    devs = [_FakeDev("cpu"), _FakeDev("tpu"), _FakeDev("tpu")]
+    topo = DeviceTopology.from_jax(devs)
+    assert [g.kind for g in topo.groups] == ["cpu-host", "tpu-v5e"]
+    assert [g.n_devices for g in topo.groups] == [1, 2]
+    assert topo.groups[0].target is channels.CPU_HOST
+    assert topo.groups[1].target is channels.TPU_V5E
+    assert topo.device_kind == "mixed"
+    assert topo.heterogeneous_kinds
+    assert topo.spec_string() == "cpu-host:1+tpu-v5e:2"
+
+
+def test_from_jax_homogeneous_pool_keeps_legacy_single_group():
+    homo = DeviceTopology.from_jax([_FakeDev("cpu")] * 3)
+    assert len(homo.groups) == 1
+    assert homo.groups[0].target is None  # plan-wide target still rules
+    assert homo.device_kind == "cpu"
+    assert not homo.heterogeneous_kinds
+
+
+def test_from_jax_rejects_unsupported_mixes_clearly():
+    with pytest.raises(PlacementError, match="interleave"):
+        DeviceTopology.from_jax(
+            [_FakeDev("cpu"), _FakeDev("tpu"), _FakeDev("cpu")]
+        )
+    with pytest.raises(PlacementError, match="no memory datasheet"):
+        DeviceTopology.from_jax([_FakeDev("cpu"), _FakeDev("quantum")])
+    with pytest.raises(PlacementError, match=">= 1 device"):
+        DeviceTopology.from_jax([])
+
+
+def test_parse_spec_strings_and_kind_aliases():
+    topo = DeviceTopology.parse("cpu:2,tpu:4")
+    assert topo.n_devices == 6
+    assert topo.spec_string() == "cpu-host:2+tpu-v5e:4"
+    assert DeviceTopology.parse("4").spec_string() == "4xgeneric"
+    assert resolve_kind_target("alveo") is channels.ALVEO_U280
+    assert resolve_kind_target("host") is channels.CPU_HOST
+    assert resolve_kind_target("generic") is None
+    for bad in ("", "cpu-2", "cpu:", ":2", "cpu:x"):
+        with pytest.raises(PlacementError):
+            DeviceTopology.parse(bad)
+
+
+# ---------------------------------------------------------------------------
+# kind-aware pricing, per-stage E, channels, signature
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def cfd_chain():
+    return operators.build_cfd_chain(5)
+
+
+def _hetero_plan(cfd_chain, **kw):
+    args = dict(
+        target=channels.ALVEO_U280, batch_elements=256,
+        prefetch_depth=(2, 1, 1), cu_count=(1, 2, 1),
+        topology=DeviceTopology.parse("cpu:1,alveo:2"),
+        stage_groups=(0, 1, 1), n_eq=1 << 12,
+    )
+    args.update(kw)
+    return mchain.plan_chain(cfd_chain, **args)
+
+
+def test_per_stage_targets_price_each_group(cfd_chain):
+    plan = _hetero_plan(cfd_chain)
+    assert plan.feasible
+    assert [sp.kind for sp in plan.stages] == [
+        "cpu-host", "alveo-u280", "alveo-u280"]
+    # the cpu-host stage is priced against the host datasheet: same
+    # stage planned on the alveo group is strictly faster on HBM
+    alveo = _hetero_plan(cfd_chain, stage_groups=(1, 1, 1), cu_count=1)
+    cpu0 = plan.stages[0].cost
+    alv0 = alveo.stages[0].cost
+    assert cpu0.t_hbm > alv0.t_hbm
+
+
+def test_channel_assignment_per_group_bases(cfd_chain):
+    """Each stream's channels come from the producing stage's group:
+    cpu-host ids stay inside [0, 4), alveo ids inside [4, 36)."""
+    plan = _hetero_plan(cfd_chain)
+    n_cpu = channels.CPU_HOST.n_channels
+    for i, sp in enumerate(plan.stages):
+        ids = {c for b in sp.buffers for c in b.channels}
+        assert ids, sp.name
+        if plan.placement.stage_kind(i) == "cpu-host":
+            assert max(ids) < n_cpu
+        else:
+            assert min(ids) >= n_cpu
+    rep = plan.report()
+    total = plan.placement.topology.total_channels(plan.target)
+    assert total == n_cpu + channels.ALVEO_U280.n_channels
+    assert f"/{total} used" in rep
+    # per-stage (kind, E, channels) lines in the placement section
+    assert "stage interp: kind=cpu-host" in rep
+    assert "kind=alveo-u280" in rep
+
+
+def test_reblock_term_prices_e_and_kind_changes(cfd_chain):
+    """A handoff across an E or kind change carries an explicit
+    re-block term billed to the consumer stage; uniform same-kind plans
+    carry none."""
+    uniform = mchain.plan_chain(
+        cfd_chain, target=channels.ALVEO_U280, batch_elements=256,
+        prefetch_depth=1, n_eq=1 << 12,
+    )
+    assert uniform.cost.t_reblock == ()
+    assert uniform.cost.t_reblock_total == 0.0
+    hetero = _hetero_plan(cfd_chain, stage_batch_elements=(64, 256, 256))
+    assert hetero.stage_batch_elements == (64, 256, 256)
+    assert hetero.stage_e(0) == 64 and hetero.stage_e(2) == 256
+    rb = hetero.cost.t_reblock
+    assert rb and rb[0] == 0.0       # nothing flows into stage 0
+    assert rb[1] > 0.0               # E change AND kind change at 0->1
+    assert rb[2] == 0.0              # same E, same kind at 1->2
+    assert hetero.cost.t_serial >= sum(rb)
+    assert "re-block handoffs:" in hetero.report()
+    # kind change alone (uniform E) still pays the slower link
+    kind_only = _hetero_plan(cfd_chain)
+    assert kind_only.cost.t_reblock[1] > 0.0
+
+
+def test_signature_hashes_hetero_spec_and_stage_e(cfd_chain):
+    """Plans differing only in group assignment or per-stage E must not
+    share a signature (the profile store and serve cache key on it)."""
+    uniform = mchain.plan_chain(
+        cfd_chain, target=channels.ALVEO_U280, batch_elements=256,
+        prefetch_depth=(2, 1, 1), cu_count=(1, 2, 1),
+        topology=DeviceTopology.homogeneous(3), n_eq=1 << 12,
+    )
+    hetero = _hetero_plan(cfd_chain)
+    swapped = _hetero_plan(cfd_chain, stage_groups=(1, 1, 0),
+                           cu_count=(2, 1, 1))
+    blocked = _hetero_plan(cfd_chain, stage_batch_elements=(64, 256, 256))
+    sigs = {uniform.signature, hetero.signature, swapped.signature,
+            blocked.signature}
+    assert len(sigs) == 4
+
+
+def test_snap_stage_elements_divides_and_aligns():
+    snap = mchain.snap_stage_elements
+    assert snap(256, 64, 1) == 64
+    assert snap(256, 100, 1) == 64   # largest divisor <= request
+    assert snap(256, 64, 8) == 64    # already a multiple of cu
+    assert snap(240, 50, 4) == 48    # divisor of 240, multiple of 4
+    assert snap(256, 1, 4) == 4      # floor at cu
+    assert snap(7, 3, 2) == 7        # no aligned divisor: whole batch
+
+
+# ---------------------------------------------------------------------------
+# acceptance: hetero DSE never ranks behind homogeneous-restricted
+# ---------------------------------------------------------------------------
+
+
+def test_explore_chain_hetero_beats_homogeneous_restricted(cfd_chain):
+    """The mixed 2-kind winner's predicted pipelined time is <= the
+    best plan with every stage pinned to one kind group (same device
+    budget): the hetero search sweeps each group's uniform grid
+    explicitly, so the restricted optimum is in its candidate set."""
+    topo = DeviceTopology.parse("cpu:2,alveo:2")
+    space = dse.ChainDesignSpace(
+        backends=("xla",), batch_divisors=(1,),
+        prefetch_depths=(0, 1), cu_counts=(1, 2), max_placements=8,
+    )
+    cands = dse.explore_chain(
+        cfd_chain, target=channels.ALVEO_U280, n_eq=1 << 14,
+        space=space, topology=topo,
+    )
+    best = next(c for c in cands if c.plan.feasible)
+    n = len(cfd_chain.stages)
+    restricted = []
+    for gi in range(len(topo.groups)):
+        for cu in (1, 2):
+            for depth in (0, 1):
+                p = mchain.plan_chain(
+                    cfd_chain, target=channels.ALVEO_U280,
+                    prefetch_depth=depth, cu_count=cu, topology=topo,
+                    stage_groups=[gi] * n, n_eq=1 << 14,
+                )
+                if p.feasible:
+                    restricted.append(
+                        p.cost.t_pipelined / p.batch_elements
+                    )
+    assert restricted
+    assert best.predicted_s_per_element <= min(restricted) * (1 + 1e-9)
+    # and the sweep really used both kinds somewhere in the ranking
+    kinds_seen = {
+        c.plan.placement.stage_kind(i)
+        for c in cands for i in range(n)
+    }
+    assert {"cpu-host", "alveo-u280"} <= kinds_seen
+
+
+def test_explore_chain_hetero_candidates_are_executable_specs(cfd_chain):
+    """Every ranked hetero candidate carries a single-kind group per
+    stage and a stage E that divides the chain E and shards on its
+    group."""
+    topo = DeviceTopology.parse("cpu:1,alveo:2")
+    space = dse.ChainDesignSpace(
+        backends=("xla",), batch_divisors=(1, 4),
+        prefetch_depths=(0, 1), cu_counts=(1, 2), max_placements=8,
+    )
+    cands = dse.explore_chain(
+        cfd_chain, target=channels.ALVEO_U280, n_eq=1 << 14,
+        space=space, topology=topo,
+    )
+    assert cands
+    for c in cands:
+        plan = c.plan
+        for i, sp in enumerate(plan.stages):
+            e_s = plan.stage_e(i)
+            assert plan.batch_elements % e_s == 0
+            assert e_s % sp.cu_count == 0
+            gi = plan.placement.stage_group_index(i)
+            assert sp.cu_count <= topo.groups[gi].n_devices
+
+
+# ---------------------------------------------------------------------------
+# property: re-blocked execution bitwise-equal to the serial reference
+# ---------------------------------------------------------------------------
+
+_REF_CACHE = {}
+
+
+def _reblock_fixture():
+    if "ref" not in _REF_CACHE:
+        p, E, n_b = 5, 16, 2
+        n = E * n_b
+        ch = operators.build_cfd_chain(p)
+        rng = np.random.default_rng(3)
+        inputs = {
+            "interp.u": rng.uniform(
+                -1, 1, (n, p, p, p)).astype(np.float32),
+            "helmholtz.D": rng.uniform(
+                -1, 1, (n, p, p, p)).astype(np.float32),
+        }
+        shared = {
+            name: rng.uniform(-1, 1, node.shape).astype(np.float32)
+            for name, node in sorted(ch.shared_operands().items())
+        }
+        base_plan = mchain.plan_chain(
+            ch, target=channels.CPU_HOST, batch_elements=E, n_eq=n,
+            prefetch_depth=0,
+        )
+        base = simulation.run_chain(
+            ch, base_plan, inputs=inputs, shared=shared,
+            collect_outputs=True, pipeline_stages=False,
+        )
+        _REF_CACHE["ref"] = (ch, E, n, inputs, shared, base.outputs)
+    return _REF_CACHE["ref"]
+
+
+def _check_reblocked_bitwise(divs, depths):
+    ch, E, n, inputs, shared, want = _reblock_fixture()
+    plan = mchain.plan_chain(
+        ch, target=channels.CPU_HOST, batch_elements=E, n_eq=n,
+        prefetch_depth=list(depths),
+        stage_batch_elements=[E // d for d in divs],
+    )
+    assert plan.feasible
+    got = simulation.run_chain(
+        ch, plan, inputs=inputs, shared=shared, collect_outputs=True,
+    )
+    for q in want:
+        assert np.array_equal(want[q], got.outputs[q]), (q, divs, depths)
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - CI installs hypothesis
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+
+    @given(
+        divs=st.tuples(*[st.sampled_from([1, 2, 4, 8])] * 3),
+        depths=st.tuples(*[st.integers(0, 2)] * 3),
+    )
+    @settings(max_examples=10, deadline=None)
+    def test_reblocked_execution_bitwise_equal_property(divs, depths):
+        _check_reblocked_bitwise(divs, depths)
+
+else:  # deterministic fallback so the property still runs everywhere
+
+    @pytest.mark.parametrize("divs,depths", [
+        ((1, 1, 1), (1, 1, 1)),
+        ((2, 1, 4), (2, 0, 1)),
+        ((8, 2, 1), (0, 1, 2)),
+        ((4, 4, 4), (1, 1, 1)),
+        ((1, 8, 2), (2, 2, 2)),
+    ])
+    def test_reblocked_execution_bitwise_equal_property(divs, depths):
+        _check_reblocked_bitwise(divs, depths)
+
+
+# ---------------------------------------------------------------------------
+# flow + CLI + cache key: the hetero spec threads end-to-end
+# ---------------------------------------------------------------------------
+
+P = 3
+SRC = dsl.INVERSE_HELMHOLTZ_SRC.format(p=P)
+FLOW_KW = dict(
+    element_vars=("u", "D", "v"), target=channels.CPU_HOST,
+    batch_elements=4, n_eq=8,
+)
+
+
+def test_flow_compile_accepts_hetero_devices_spec():
+    system = build.compile(SRC, devices="cpu:1,alveo:1", **FLOW_KW)
+    topo = system.plan.placement.topology
+    assert len(topo.groups) == 2
+    assert topo.spec_string() == "cpu-host:1+alveo-u280:1"
+    assert "kind=" in system.report()
+    with pytest.raises(build.FlowError, match="kind:count"):
+        build.compile(SRC, devices="cpu-2", **FLOW_KW)
+
+
+def test_topology_fingerprint_hashes_hetero_spec():
+    assert build.topology_fingerprint(None) == "auto"
+    assert build.topology_fingerprint(3) == "3xgeneric"
+    assert (build.topology_fingerprint("cpu:1,alveo:2")
+            == "cpu-host:1+alveo-u280:2")
+    assert (build.topology_fingerprint(
+        DeviceTopology.parse("cpu:1,alveo:2"))
+        == "cpu-host:1+alveo-u280:2")
+    # the serve cache key separates hetero specs from same-size pools
+    k_hetero = build.cache_key(SRC, devices="cpu:1,alveo:2", **FLOW_KW)
+    k_flat = build.cache_key(SRC, devices=3, **FLOW_KW)
+    k_other = build.cache_key(SRC, devices="cpu:2,alveo:1", **FLOW_KW)
+    assert len({k_hetero, k_flat, k_other}) == 3
+
+
+def test_flow_cli_devices_spec(tmp_path, capsys):
+    src = tmp_path / "p.cfd"
+    src.write_text(SRC)
+    rc = flow_cli.main([
+        str(src), "--element-vars", "u,D,v", "--target", "cpu-host",
+        "--devices", "cpu:1,alveo:1",
+    ])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "kind=cpu-host" in out or "kind=alveo-u280" in out
+    rc = flow_cli.main([
+        str(src), "--element-vars", "u,D,v", "--target", "cpu-host",
+        "--devices", "cpu-2",
+    ])
+    assert rc == 2
+    assert "kind:count" in capsys.readouterr().err
+
+
+# ---------------------------------------------------------------------------
+# acceptance: forced-2-kind subprocess executes the cross-kind handoff
+# ---------------------------------------------------------------------------
+
+HETERO_SCRIPT = textwrap.dedent("""
+    import json
+    import numpy as np
+    import jax
+
+    from repro.cfd import operators, simulation
+    from repro.memory import chain as mchain
+    from repro.memory import channels
+    from repro.memory.placement import DeviceTopology
+
+    assert jax.device_count() == 2, jax.devices()
+    p, E, n_b = 5, 16, 4
+    n = E * n_b
+    chain = operators.build_cfd_chain(p)
+    rng = np.random.default_rng(0)
+    inputs = {
+        "interp.u": rng.uniform(-1, 1, (n, p, p, p)).astype(np.float32),
+        "helmholtz.D": rng.uniform(-1, 1, (n, p, p, p)).astype(np.float32),
+    }
+    shared = {
+        name: rng.uniform(-1, 1, node.shape).astype(np.float32)
+        for name, node in sorted(chain.shared_operands().items())
+    }
+
+    # a declared 2-kind fleet over the 2 forced host devices: stage 0 on
+    # the cpu-host group at half E, the rest on the alveo group -- the
+    # 0->1 handoff re-blocks AND crosses kinds
+    topo = DeviceTopology.parse("cpu:1,alveo:1")
+    plan = mchain.plan_chain(
+        chain, target=channels.CPU_HOST, batch_elements=E, n_eq=n,
+        prefetch_depth=(2, 1, 1), cu_count=1, topology=topo,
+        stage_groups=(0, 1, 1), stage_batch_elements=(E // 2, E, E),
+    )
+    assert plan.feasible, plan.infeasible_reason
+    assert plan.placement.stage_kind(0) == "cpu-host"
+    assert plan.placement.stage_kind(1) == "alveo-u280"
+    assert plan.cost.t_reblock[1] > 0.0
+    piped = simulation.run_chain(
+        chain, plan, inputs=inputs, shared=shared, collect_outputs=True,
+    )
+    assert piped.placement_groups is not None
+
+    base_plan = mchain.plan_chain(
+        chain, target=channels.CPU_HOST, batch_elements=E, n_eq=n,
+        prefetch_depth=0,
+    )
+    base = simulation.run_chain(
+        chain, base_plan, inputs=inputs, shared=shared,
+        collect_outputs=True, pipeline_stages=False,
+    )
+    equal = all(
+        np.array_equal(base.outputs[q], piped.outputs[q])
+        for q in base.outputs
+    )
+    print(json.dumps({
+        "equal": bool(equal),
+        "groups": [list(g) for g in piped.placement_groups],
+        "kinds": [plan.placement.stage_kind(i) for i in range(3)],
+        "stage_e": list(plan.stage_batch_elements),
+    }))
+""")
+
+
+@pytest.mark.slow
+def test_two_kind_placement_bitwise_equal_subprocess():
+    """Acceptance: a 2-kind placement with a re-blocked cross-kind
+    handoff executes bitwise-equal to the serial single-mesh reference
+    on a real 2-device mesh (mirrors the forced-2-device homogeneous
+    test)."""
+    import json
+
+    res = subprocess.run(
+        [sys.executable, "-c", HETERO_SCRIPT],
+        env=subprocess_env(2), capture_output=True, text=True, timeout=420,
+    )
+    assert res.returncode == 0, res.stderr[-3000:]
+    out = json.loads(res.stdout.strip().splitlines()[-1])
+    assert out["equal"] is True
+    assert out["kinds"] == ["cpu-host", "alveo-u280", "alveo-u280"]
+    assert out["stage_e"] == [8, 16, 16]
+    assert out["groups"][0] != out["groups"][1]  # distinct kind groups

@@ -481,6 +481,91 @@ def test_compile_threads_profile_into_dse(tmp_path, monkeypatch):
     assert system.plan.feasible
 
 
+def test_profile_src_digest_aging_on_planner_edit(tmp_path):
+    """A planner-source change under an unchanged COST_MODEL_VERSION
+    still ages out old samples: the src stamp gates code drift, not
+    just declared epochs."""
+    from repro.trace.profile import ProfileStore, plan_code_digest
+
+    p = str(tmp_path / "prof.json")
+    store = ProfileStore(path=p, fingerprint="fp")
+    assert store.src == plan_code_digest()
+    store.record("tgt", "sig", [
+        {"predicted_s": 1.0, "measured_s": 2.0, "bottleneck": "hbm"}])
+    assert len(store.samples("tgt", "sig")) == 1
+    on_disk = json.load(open(p))["entries"]["fp/tgt/sig"]
+    assert on_disk[0]["src"] == store.src
+
+    # same epoch, different planner source -> the old ratios measured a
+    # different planner; the refit must not see them
+    edited = ProfileStore(path=p, fingerprint="fp", src="feedbeefcafe")
+    assert edited.epoch == store.epoch
+    assert edited.samples("tgt", "sig") == []
+    assert edited.correction("tgt", "sig").n_samples == 0
+    # recording post-edit prunes the stale bucket in the file
+    edited.record("tgt", "sig", [
+        {"predicted_s": 1.0, "measured_s": 4.0, "bottleneck": "hbm"}])
+    on_disk = json.load(open(p))["entries"]["fp/tgt/sig"]
+    assert len(on_disk) == 1 and on_disk[0]["src"] == "feedbeefcafe"
+
+
+def test_profile_src_unstamped_samples_tolerated(tmp_path):
+    """Samples recorded before the src stamp existed (right epoch, no
+    src key) still surface: the digest gates drift, it does not orphan
+    pre-stamp history."""
+    from repro.trace.profile import ProfileStore, cost_model_epoch
+
+    p = str(tmp_path / "old.json")
+    with open(p, "w") as f:
+        json.dump({"version": 1, "entries": {"fp/tgt/sig": [
+            {"predicted_s": 1.0, "measured_s": 2.0, "bottleneck": "hbm",
+             "epoch": cost_model_epoch()}]}}, f)
+    store = ProfileStore(path=p, fingerprint="fp")
+    assert len(store.samples("tgt", "sig")) == 1
+    assert store.correction("tgt", "sig").factor == pytest.approx(2.0)
+
+
+def test_plan_cache_warm_hit_picks_up_profile_refit(tmp_path, monkeypatch):
+    """profile= threads through warm hits: the cache key excludes it,
+    so a hit must re-apply the store's *current* correction -- feedback
+    recorded after the original compile reaches the next compile."""
+    from repro.memory import dse as dse_mod
+    from repro.trace.profile import ProfileStore
+
+    store = ProfileStore(path=str(tmp_path / "p.json"), fingerprint="fp")
+    cache = PlanCache()
+    kw = dict(KW, dse=True, profile=store)
+    first = cache.get_or_compile(SRC, **kw)
+    assert cache.misses == 1 and first.candidates
+
+    # feedback lands in the store between the two compiles
+    store.record(first.target.name, first.plan.signature, [
+        {"predicted_s": 1.0, "measured_s": 3.0, "bottleneck": "hbm"}])
+
+    applied = {}
+    real = dse_mod.apply_correction
+
+    def spy(cands, corr):
+        applied["corr"] = corr
+        return real(cands, corr)
+
+    monkeypatch.setattr(dse_mod, "apply_correction", spy)
+    again = cache.get_or_compile(SRC, **kw)
+    assert (cache.hits, cache.misses) == (1, 1)  # profile= not in the key
+    assert again is first
+    assert applied["corr"].n_samples >= 1       # refit reached the hit
+    assert all(
+        c.corrected_s_per_element is not None for c in again.candidates
+    )
+    # without a profile the hit path stays untouched
+    cold = PlanCache()
+    kw2 = dict(KW, dse=True)
+    one = cold.get_or_compile(SRC, **kw2)
+    applied.clear()
+    assert cold.get_or_compile(SRC, **kw2) is one
+    assert not applied
+
+
 def test_flow_cli_profile_requires_trace_or_dse(tmp_path, capsys):
     src = tmp_path / "p.cfd"
     src.write_text(SRC)
